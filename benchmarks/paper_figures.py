@@ -1,0 +1,170 @@
+"""Paper figure reproductions (Figs 3-12).
+
+No GB10 here: "measured" values come from the trace-driven LRU simulator
+(GB10 geometry) and the analytic model; throughput figures use the additive
+stall model calibrated ONLY on the paper's cyclic baselines (sawtooth
+numbers are predictions). Figures whose full size would need >10^8 trace
+events run at a KV:L2-ratio-preserving scale (noted in `derived`), since
+miss *ratios* are scale-invariant in this regime (verified in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.cache_model import (
+    GB10,
+    AttentionWorkload,
+    attention_flops,
+    calibrate_miss_service,
+    cold_miss_sectors,
+    gb10_throughput_model,
+    l2_sector_accesses,
+)
+from repro.core.cache_sim import simulate_attention
+
+
+def bench_fig3_fig4_sector_model_vs_seq():
+    """Fig 3 (non-causal) / Fig 4 (causal): L2 sectors vs S, model vs sim."""
+    rows = []
+    for causal, fig in ((False, "fig3"), (True, "fig4")):
+        t0 = time.perf_counter()
+        worst = 0.0
+        for seq in (2048, 4096, 8192, 16384, 32768):
+            w = AttentionWorkload(seq_len=seq, tile=80, causal=causal)
+            sim = simulate_attention(w, GB10, "cyclic", n_workers=48)
+            model = l2_sector_accesses(w, GB10)
+            worst = max(worst, abs(model - sim.accesses) / sim.accesses)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"{fig}_sector_vs_seq", us, f"worst_err={100*worst:.3f}%"))
+    return rows
+
+
+def bench_fig5_divergence():
+    """Fig 5: L2 misses ~= cold misses (16S) until KV ~ L2 capacity, then
+    diverge. Paper: divergence at S ~ 80K (KV 20MiB vs 24MiB).
+    Scaled geometry: L2/8 = 3MiB -> expected divergence at S ~ 10-12K."""
+    hw = dataclasses.replace(GB10, cache_bytes=3 * 2**20)
+    t0 = time.perf_counter()
+    diverged_at = None
+    for seq in (4096, 6144, 8192, 10240, 12288, 16384, 24576):
+        w = AttentionWorkload(seq_len=seq, tile=80)
+        r = simulate_attention(w, hw, "cyclic", n_workers=48)
+        cold = cold_miss_sectors(w, hw)
+        if r.misses > 1.15 * cold and diverged_at is None:
+            diverged_at = seq
+    us = (time.perf_counter() - t0) * 1e6
+    # KV bytes at divergence, relative to cache (paper: 20MiB/24MiB = 0.83)
+    kv_frac = 2 * diverged_at * 64 * 2 / hw.cache_bytes if diverged_at else float("nan")
+    return [("fig5_divergence_scaled1/8", us, f"S_div={diverged_at},KV/L2={kv_frac:.2f}")]
+
+
+def bench_fig6_hit_rate_vs_sms():
+    """Fig 6: hit rate ~ 1 - 1/N_SM in the overflow regime."""
+    hw = dataclasses.replace(GB10, cache_bytes=2 * 2**20)
+    w = AttentionWorkload(seq_len=16384, tile=64)
+    t0 = time.perf_counter()
+    worst = 0.0
+    for n in (2, 4, 8, 16, 32, 48):
+        r = simulate_attention(w, hw, "cyclic", n_workers=n)
+        worst = max(worst, abs(r.hit_rate - (1 - 1 / n)))
+    us = (time.perf_counter() - t0) * 1e6
+    return [("fig6_hitrate_1_minus_1_over_n", us, f"worst_abs_dev={worst:.4f}")]
+
+
+# Paper CUDA numbers (Fig 7): cyclic ~1.3 TFLOPS -> sawtooth ~2.4 TFLOPS.
+# Paper CuTile (Fig 9-12): tile 64, B=8, S=128K, D=64:
+#   non-causal: 370M->120M miss sectors, 61->69 TFLOPS
+#   causal:     41->66 TFLOPS
+CUTILE_W = dict(tile=64, head_dim=64, batch=8)
+CUTILE_KERNEL_PEAK = 74e12  # calibrated compute ceiling (EXPERIMENTS.md)
+
+
+def _scaled_cutile(causal: bool, scale: int = 2):
+    """KV:L2-ratio-preserving scale-down of the CuTile geometry
+    (S 128K -> 128K/scale, L2 24 -> 24/scale MiB, B 8 -> 8/max(scale/2,1)).
+
+    The miss-*reduction* is scale-sensitive below ~1/2 scale because worker/
+    tile-count misalignment dilutes wavefront sharing (EXPERIMENTS.md
+    §Paper-validation reports the full-geometry run from
+    artifacts/fullscale_sim.json); 1/2 scale keeps the bench < 2 min.
+    """
+    hw = dataclasses.replace(GB10, cache_bytes=24 * 2**20 // scale)
+    kw = dict(CUTILE_W)
+    kw["batch"] = max(kw["batch"] // max(scale // 2, 1), 1)
+    w = AttentionWorkload(seq_len=131072 // scale, causal=causal, **kw)
+    return hw, w
+
+
+def bench_fig7_fig8_cuda_sawtooth():
+    """CUDA experiment (paper Fig 7/8: batch sweep B in {1,2,4,8}):
+    ~50% non-compulsory miss reduction across all B, 1.3->2.4 TFLOPS.
+    The CUDA kernel uses T=80 tiles (paper §3.2); geometry scaled 1/4 with
+    the KV:L2 ratio preserved. Stall model calibrated on cyclic=1.3 only."""
+    rows = []
+    hw = dataclasses.replace(GB10, cache_bytes=6 * 2**20)
+    reds = []
+    t0 = time.perf_counter()
+    last = None
+    for batch in (1, 2, 4, 8):
+        w = AttentionWorkload(seq_len=32768, tile=80, head_dim=64, batch=batch)
+        cyc = simulate_attention(w, hw, "cyclic", n_workers=48)
+        saw = simulate_attention(w, hw, "sawtooth", n_workers=48)
+        red = 100 * (1 - saw.non_compulsory_misses / cyc.non_compulsory_misses)
+        reds.append(f"B{batch}:{red:.0f}%")
+        last = (w, cyc, saw)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(
+        ("fig8_cuda_noncomp_miss_reduction", us, "|".join(reds) + "(paper~50%allB)")
+    )
+
+    # throughput: CUDA kernel is stall-dominated; calibrate svc on cyclic B=8
+    w, cyc, saw = last
+    svc = calibrate_miss_service(
+        w, hw, observed_flops=1.3e12, miss_sectors=cyc.misses, kernel_peak=CUTILE_KERNEL_PEAK
+    )
+    pred = gb10_throughput_model(
+        w, hw, saw.misses, miss_service_s=svc, kernel_peak=CUTILE_KERNEL_PEAK
+    )
+    rows.append(
+        ("fig7_cuda_throughput_sawtooth", us, f"{pred/1e12:.2f}TFLOPS(paper~2.4)")
+    )
+    return rows
+
+
+def bench_fig9_12_cutile():
+    rows = []
+    for causal, figs, base_tf, paper_tf in (
+        (False, "fig9_10", 61e12, 69.0),
+        (True, "fig11_12", 41e12, 66.0),
+    ):
+        t0 = time.perf_counter()
+        hw, w = _scaled_cutile(causal)
+        cyc = simulate_attention(w, hw, "cyclic", n_workers=48)
+        saw = simulate_attention(w, hw, "sawtooth", n_workers=48)
+        red = 100 * (1 - saw.misses / cyc.misses)
+        svc = calibrate_miss_service(
+            w, hw, observed_flops=base_tf, miss_sectors=cyc.misses,
+            kernel_peak=CUTILE_KERNEL_PEAK,
+        )
+        pred = gb10_throughput_model(
+            w, hw, saw.misses, miss_service_s=svc, kernel_peak=CUTILE_KERNEL_PEAK
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        name = "causal" if causal else "noncausal"
+        rows.append(
+            (f"{figs}_cutile_{name}", us,
+             f"miss_red={red:.1f}%(paper~67%)|pred={pred/1e12:.1f}TFLOPS(paper~{paper_tf})")
+        )
+    return rows
+
+
+def run():
+    rows = []
+    rows += bench_fig3_fig4_sector_model_vs_seq()
+    rows += bench_fig5_divergence()
+    rows += bench_fig6_hit_rate_vs_sms()
+    rows += bench_fig7_fig8_cuda_sawtooth()
+    rows += bench_fig9_12_cutile()
+    return rows

@@ -1,0 +1,91 @@
+"""Paper table reproductions (Tables 1-3).
+
+Table 1/2 — L1/L2 counter structure at SM=48 (persistent + non-persistent):
+the paper's central measurement is that L2 traffic ≈ L1Tex pass-through
+traffic and matches the analytic sector model. We reproduce the L2 rows
+from the model + simulator and check against the paper's published values.
+(The L1-hit rows are hardware counters with no analogue here; the model's
+"L1 = pass-through" assumption IS the reproduction of that finding.)
+
+Table 3 — MAPE of the model vs (paper-published) measurements.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.cache_model import (
+    GB10,
+    AttentionWorkload,
+    l2_sector_accesses,
+    l2_sector_accesses_simple,
+)
+from repro.core.cache_sim import simulate_attention
+
+# Paper Table 1 (persistent CTA) and Table 2 (non-persistent), SM=48, T=80.
+PAPER_T1_TOTAL = {32768: 107_729_467, 131072: 1_723_556_561}
+PAPER_T1_FROMTEX = {32768: 107_478_656, 131072: 1_719_093_980}
+PAPER_T2_TOTAL = {32768: 107_991_698, 131072: 1_723_401_754}
+
+
+def bench_table1_counter_model():
+    """Returns rows (name, us, derived=MAPE%)."""
+    rows = []
+    for seq, measured in sorted(PAPER_T1_TOTAL.items()):
+        w = AttentionWorkload(seq_len=seq, tile=80)
+        t0 = time.perf_counter()
+        pred = l2_sector_accesses(w, GB10)
+        us = (time.perf_counter() - t0) * 1e6
+        mape = 100 * abs(pred - measured) / measured
+        rows.append((f"table1_l2_total_s{seq//1024}k", us, f"{mape:.3f}%MAPE"))
+        # from-tex row (model counts exactly the L1Tex-path traffic)
+        mape_tex = 100 * abs(pred - PAPER_T1_FROMTEX[seq]) / PAPER_T1_FROMTEX[seq]
+        rows.append((f"table1_l2_fromtex_s{seq//1024}k", us, f"{mape_tex:.3f}%MAPE"))
+    return rows
+
+
+def bench_table2_scheduling_invariance():
+    """Paper finding: persistent vs non-persistent scheduling changes L2
+    traffic by <0.3%. Our wavefront simulator reproduces this: grid-stride
+    (persistent) vs block-per-tile ordering gives identical tile access
+    multisets, so identical model counts; we check the paper's two
+    measurements agree with one model value."""
+    rows = []
+    for seq in sorted(PAPER_T2_TOTAL):
+        w = AttentionWorkload(seq_len=seq, tile=80)
+        t0 = time.perf_counter()
+        pred = l2_sector_accesses(w, GB10)
+        us = (time.perf_counter() - t0) * 1e6
+        delta = 100 * abs(PAPER_T2_TOTAL[seq] - PAPER_T1_TOTAL[seq]) / PAPER_T1_TOTAL[seq]
+        mape = 100 * abs(pred - PAPER_T2_TOTAL[seq]) / PAPER_T2_TOTAL[seq]
+        rows.append(
+            (f"table2_nonpersistent_s{seq//1024}k", us, f"{mape:.3f}%MAPE(sched_delta={delta:.3f}%)")
+        )
+    return rows
+
+
+def bench_table3_mape():
+    """MAPE of model vs simulator-measured accesses over a seq sweep
+    (simulator stands in for ncu; paper: 0.45% non-causal, 2.49% causal)."""
+    rows = []
+    for causal in (False, True):
+        errs = []
+        t0 = time.perf_counter()
+        for seq in (2048, 4096, 8192, 16384):
+            w = AttentionWorkload(seq_len=seq, tile=80, causal=causal)
+            sim = simulate_attention(w, GB10, "cyclic", n_workers=48)
+            model = l2_sector_accesses_simple(w, GB10)
+            errs.append(abs(model - sim.accesses) / sim.accesses)
+        us = (time.perf_counter() - t0) * 1e6
+        mape = 100 * sum(errs) / len(errs)
+        name = "causal" if causal else "noncausal"
+        rows.append((f"table3_mape_{name}", us, f"{mape:.3f}%MAPE"))
+    return rows
+
+
+def run():
+    rows = []
+    rows += bench_table1_counter_model()
+    rows += bench_table2_scheduling_invariance()
+    rows += bench_table3_mape()
+    return rows

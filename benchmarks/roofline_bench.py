@@ -1,0 +1,59 @@
+"""Roofline table from dry-run artifacts (assignment deliverable g).
+
+Reads artifacts/dryrun/*.json. Prefers the trip-count-corrected records
+(*.rf.json, unrolled depth-1/2 extrapolation) and falls back to the raw
+scanned-compile records where the rf pass hasn't run.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def load_records():
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        if p.endswith(".rf.json"):
+            continue
+        with open(p) as f:
+            r = json.load(f)
+        key = (r["arch"], r["shape"], r["mesh"])
+        recs[key] = r
+        rf_path = p.replace(".json", ".rf.json")
+        if os.path.exists(rf_path):
+            with open(rf_path) as f:
+                rf = json.load(f)
+            if rf.get("status") == "ok":
+                r["roofline"] = rf["roofline"]
+                r["rf_corrected"] = True
+    return recs
+
+
+def run():
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [("roofline_table", 0.0, "NO_ARTIFACTS_run_dryrun_first")]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            rows.append((f"roofline_{arch}_{shape}_{mesh}", 0.0, "skipped:" + r["reason"][:40]))
+            continue
+        if r["status"] != "ok":
+            rows.append((f"roofline_{arch}_{shape}_{mesh}", 0.0, "ERROR"))
+            continue
+        rf = r["roofline"]
+        tag = "rf" if r.get("rf_corrected") else "raw"
+        rows.append(
+            (
+                f"roofline_{arch}_{shape}_{mesh}",
+                r.get("compile_s", 0.0) * 1e6,
+                f"{tag}|bneck={rf['bottleneck']}|Tc={rf['compute_s']:.4f}|"
+                f"Tm={rf['memory_s']:.4f}|Tx={rf['collective_s']:.4f}|"
+                f"util={rf['hw_flops_util']:.4f}|useful={rf['useful_ratio']:.3f}",
+            )
+        )
+    return rows

@@ -1,0 +1,22 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    # allow running from repo root without installation
+    sys.path.insert(0, "src")
+    from benchmarks import kernel_bench, paper_figures, paper_tables, roofline_bench
+
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    for mod in (paper_tables, paper_figures, kernel_bench, roofline_bench):
+        for name, us, derived in mod.run():
+            print(f"{name},{us:.1f},{derived}")
+    print(f"# total bench wall time: {time.time() - t_all:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+1. Build a flash-attention problem, run it with cyclic vs sawtooth KV
+   scheduling (identical outputs — the schedule is a pure locality change).
+2. Reproduce the paper's core claim on the GB10 cache simulator.
+3. Show the TPU-native structural gain (Pallas pipeline fetch elision).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GB10, AttentionWorkload, simulate_attention
+from repro.kernels import ops
+from repro.kernels.traffic import FlashGridSpec, pipeline_traffic
+
+# --- 1. sawtooth is output-preserving -------------------------------------
+q = jax.random.normal(jax.random.PRNGKey(0), (2, 512, 8, 64), jnp.bfloat16)
+k = jax.random.normal(jax.random.PRNGKey(1), (2, 512, 2, 64), jnp.bfloat16)
+v = jax.random.normal(jax.random.PRNGKey(2), (2, 512, 2, 64), jnp.bfloat16)
+
+out_cyc = ops.attention(q, k, v, order="cyclic", causal=True, impl="xla")
+out_saw = ops.attention(q, k, v, order="sawtooth", causal=True, impl="xla")
+err = float(jnp.abs(out_cyc.astype(jnp.float32) - out_saw.astype(jnp.float32)).max())
+print(f"[1] sawtooth vs cyclic max |diff| = {err:.2e}  (math-preserving)")
+
+# the Pallas TPU kernel (interpret mode on CPU) agrees too
+out_pallas = ops.attention(
+    q, k, v, order="sawtooth", causal=True, impl="pallas_interpret",
+    q_block=128, kv_block=128,
+)
+err = float(jnp.abs(out_pallas.astype(jnp.float32) - out_cyc.astype(jnp.float32)).max())
+print(f"[1] Pallas kernel vs XLA path max |diff| = {err:.2e}")
+
+# --- 2. the paper's claim on the GB10 L2 simulator -------------------------
+# (scaled geometry: KV=4MiB vs 3MiB L2 — same overflow ratio as the paper's
+#  128K-token experiment; see benchmarks/ for the full-size run)
+import dataclasses
+
+hw = dataclasses.replace(GB10, cache_bytes=3 * 2**20)
+w = AttentionWorkload(seq_len=16384, tile=64)
+cyc = simulate_attention(w, hw, "cyclic", n_workers=48)
+saw = simulate_attention(w, hw, "sawtooth", n_workers=48)
+red = 100 * (1 - saw.non_compulsory_misses / cyc.non_compulsory_misses)
+print(
+    f"[2] GB10 sim: non-compulsory misses {cyc.non_compulsory_misses:,.0f} -> "
+    f"{saw.non_compulsory_misses:,.0f}  ({red:.0f}% reduction; paper: ~50%)"
+)
+
+# --- 3. TPU structural gain: pipeline fetch elision -------------------------
+spec = FlashGridSpec(seq_q=8192, seq_kv=8192, q_block=512, kv_block=512, causal=True)
+tc = pipeline_traffic(spec, "cyclic")
+ts = pipeline_traffic(spec, "sawtooth")
+print(
+    f"[3] TPU HBM->VMEM: cyclic {tc.kv_bytes/2**20:.0f} MiB, sawtooth "
+    f"{ts.kv_bytes/2**20:.0f} MiB ({ts.elided_kv_fetches} elided fetches)"
+)

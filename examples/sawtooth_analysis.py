@@ -1,0 +1,80 @@
+"""Reproduce the paper's analysis end-to-end in one script (text figures).
+
+Produces the paper's core plots as ASCII tables:
+  A. L2 sector model vs simulator across sequence lengths  (Fig 3/4)
+  B. miss-vs-cold divergence sweep                          (Fig 5)
+  C. hit rate vs active workers, with the 1-1/N law         (Fig 6)
+  D. cyclic vs sawtooth misses + modelled throughput        (Fig 7-12)
+
+  PYTHONPATH=src python examples/sawtooth_analysis.py
+"""
+
+import dataclasses
+
+from repro.core.cache_model import (
+    GB10,
+    AttentionWorkload,
+    calibrate_miss_service,
+    cold_miss_sectors,
+    gb10_throughput_model,
+    l2_sector_accesses,
+)
+from repro.core.cache_sim import simulate_attention
+
+
+def section(title):
+    print(f"\n=== {title} " + "=" * max(0, 60 - len(title)))
+
+
+def main():
+    section("A. sector-access model vs LRU simulator (T=80, D=64)")
+    print(f"{'S':>8} {'model':>15} {'simulated':>15} {'err%':>7}")
+    for s in (2048, 4096, 8192, 16384):
+        w = AttentionWorkload(seq_len=s, tile=80)
+        sim = simulate_attention(w, GB10, "cyclic", n_workers=48)
+        model = l2_sector_accesses(w, GB10)
+        err = 100 * abs(model - sim.accesses) / sim.accesses
+        print(f"{s:>8} {model:>15,.0f} {sim.accesses:>15,.0f} {err:>6.2f}%")
+
+    section("B. divergence of misses from cold misses (1/8-scale L2)")
+    hw = dataclasses.replace(GB10, cache_bytes=3 * 2**20)
+    print(f"{'S':>8} {'misses':>12} {'cold(16S)':>12} {'ratio':>6}")
+    for s in (4096, 8192, 10240, 12288, 16384):
+        w = AttentionWorkload(seq_len=s, tile=80)
+        r = simulate_attention(w, hw, "cyclic", n_workers=48)
+        cold = cold_miss_sectors(w, hw)
+        print(f"{s:>8} {r.misses:>12,.0f} {cold:>12,.0f} {r.misses/cold:>6.2f}")
+
+    section("C. hit rate vs N workers (overflow regime) vs 1 - 1/N")
+    hw = dataclasses.replace(GB10, cache_bytes=2 * 2**20)
+    w = AttentionWorkload(seq_len=16384, tile=64)
+    print(f"{'N':>4} {'hit rate':>9} {'1-1/N':>7}")
+    for n in (1, 2, 4, 8, 16, 48):
+        r = simulate_attention(w, hw, "cyclic", n_workers=n)
+        print(f"{n:>4} {r.hit_rate:>9.4f} {1 - 1/n:>7.4f}")
+
+    section("D. cyclic vs sawtooth (1/2-scale CuTile geometry)")
+    hw = dataclasses.replace(GB10, cache_bytes=12 * 2**20)
+    for causal in (False, True):
+        w = AttentionWorkload(seq_len=65536, tile=64, batch=4, causal=causal)
+        cyc = simulate_attention(w, hw, "cyclic", n_workers=48)
+        saw = simulate_attention(w, hw, "sawtooth", n_workers=48)
+        red = 100 * (1 - saw.misses / cyc.misses)
+        base = 41e12 if causal else 61e12
+        svc = calibrate_miss_service(
+            w, hw, observed_flops=base, miss_sectors=cyc.misses, kernel_peak=74e12
+        )
+        pred = gb10_throughput_model(
+            w, hw, saw.misses, miss_service_s=svc, kernel_peak=74e12
+        )
+        tag = "causal" if causal else "non-causal"
+        print(
+            f"{tag:>11}: misses {cyc.misses:,.0f} -> {saw.misses:,.0f} "
+            f"({red:.1f}% less) | throughput {base/1e12:.0f} -> "
+            f"{pred/1e12:.1f} TFLOPS (modelled)"
+        )
+    print("\npaper: ~67% miss reduction; 61->69 (non-causal), 41->66 (causal) TFLOPS")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.analysis import constants, hlo, roofline
+
+__all__ = ["constants", "hlo", "roofline"]

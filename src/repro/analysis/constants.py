@@ -1,0 +1,11 @@
+"""Target-hardware constants (TPU v5e) for the roofline analysis.
+
+These are the numbers the assignment fixes; the container runs on CPU, the
+roofline is *derived* (compiled-HLO terms / these peaks), not measured.
+"""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW_PER_LINK = 50e9        # bytes/s per link (assignment: ~50 GB/s/link)
+CHIP_HBM_BYTES = 16 * 2**30   # v5e: 16 GiB per chip
+VMEM_BYTES = 128 * 2**20

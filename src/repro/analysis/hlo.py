@@ -1,0 +1,70 @@
+"""HLO-text parsing: per-device collective traffic from a compiled module.
+
+``compiled.as_text()`` of a GSPMD-partitioned module has per-device shapes;
+summing the result-buffer sizes of every collective op gives the per-chip
+collective byte count used by the §Roofline collective term.
+
+cost_analysis() does NOT include collective bytes — this parser is the
+authoritative source (assignment instruction).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "parse_shape_bytes", "count_ops"]
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "bf16": 2, "f16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# matches: "%name = TYPE op-name(" where TYPE may be a tuple
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def parse_shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind result bytes (per device). '-done' ops skipped to
+    avoid double counting async pairs."""
+    out: dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind, phase = m.groups()
+        if phase == "-done":
+            continue
+        out[kind] += parse_shape_bytes(type_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str, names=("fusion", "while", "custom-call")) -> dict[str, int]:
+    return {n: len(re.findall(rf"\b{re.escape(n)}\(", hlo_text)) for n in names}

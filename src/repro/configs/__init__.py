@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ParallelConfig,
+    ShapeConfig,
+    SSMConfig,
+    TrainConfig,
+)
+from repro.configs.registry import ARCH_IDS, all_configs, get_config
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "MoEConfig",
+    "ParallelConfig",
+    "ShapeConfig",
+    "SSMConfig",
+    "TrainConfig",
+    "ARCH_IDS",
+    "all_configs",
+    "get_config",
+]

@@ -1,0 +1,28 @@
+"""Core: the paper's contribution — sawtooth KV scheduling + cache analysis."""
+
+from repro.core.schedule import KVSchedule, Order, kv_index, kv_index_host
+from repro.core.cache_model import (
+    GB10,
+    TPU_V5E_DMA,
+    AttentionWorkload,
+    HWConfig,
+)
+from repro.core.cache_sim import SimResult, simulate_attention, simulate_trace
+from repro.core.attention import decode_attention, flash_attention, mha_reference
+
+__all__ = [
+    "KVSchedule",
+    "Order",
+    "kv_index",
+    "kv_index_host",
+    "GB10",
+    "TPU_V5E_DMA",
+    "AttentionWorkload",
+    "HWConfig",
+    "SimResult",
+    "simulate_attention",
+    "simulate_trace",
+    "decode_attention",
+    "flash_attention",
+    "mha_reference",
+]

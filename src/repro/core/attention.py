@@ -1,0 +1,228 @@
+"""Blockwise (flash) attention in pure JAX, parameterized by KV schedule.
+
+This is the framework's reference execution path: it is the oracle for the
+Pallas kernels, the implementation used on CPU (and in the multi-pod
+dry-run, where Pallas-TPU cannot lower), and the place where the paper's
+sawtooth schedule is demonstrably *math-preserving* — online softmax is
+traversal-order invariant, so cyclic and sawtooth produce identical outputs
+up to floating-point reassociation (property-tested).
+
+Layout convention: q:(B, Sq, Hq, D), k/v:(B, Skv, Hkv, D) with Hq % Hkv == 0
+(GQA). Output (B, Sq, Hq, D), accumulation in f32, output in q.dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import Order, kv_index
+
+__all__ = ["mha_reference", "flash_attention", "decode_attention"]
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _mask_bias(
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    kv_len: int,
+) -> jax.Array:
+    """Additive mask bias (0 or -inf) for global row/col index grids."""
+    m = cols < kv_len  # mask out kv padding
+    if causal:
+        m &= cols[None, :] <= rows[:, None]
+    if window is not None:
+        m &= cols[None, :] > rows[:, None] - window
+    if not causal and window is None:
+        m = jnp.broadcast_to(m[None, :], (rows.shape[0], cols.shape[0]))
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def mha_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Full-materialization attention. Small shapes / testing only."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = d ** -0.5 if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    rows = jnp.arange(sq)
+    cols = jnp.arange(skv)
+    s = s + _mask_bias(rows, cols, causal=causal, window=window, kv_len=skv)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "order",
+        "causal",
+        "window",
+        "q_block",
+        "kv_block",
+        "scale",
+        "score_dtype",
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    order: Order | str = Order.CYCLIC,
+    causal: bool = False,
+    window: Optional[int] = None,
+    q_block: int = 128,
+    kv_block: int = 128,
+    scale: Optional[float] = None,
+    score_dtype: str = "float32",
+) -> jax.Array:
+    """Blockwise online-softmax attention, KV traversed in schedule order.
+
+    Structure mirrors paper Alg. 1 (split-Q: Q tile resident, KV streamed)
+    with the KV visit order given by Alg. 4 when ``order == 'sawtooth'``.
+    Q blocks are independent (vmapped — the 'parallel for' of Alg. 1); the
+    KV stream is a ``lax.scan`` so the lowered HLO stays small at any S.
+    """
+    order = Order.parse(order)
+    sdt = jnp.dtype(score_dtype)
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale_ = d ** -0.5 if scale is None else scale
+
+    q_block = min(q_block, max(sq, 1))
+    kv_block = min(kv_block, max(skv, 1))
+
+    qp = _pad_to(q, 1, q_block)
+    kp = _pad_to(k, 1, kv_block)
+    vp = _pad_to(v, 1, kv_block)
+    sq_p, skv_p = qp.shape[1], kp.shape[1]
+    nq, nkv = sq_p // q_block, skv_p // kv_block
+
+    # (B, Hkv, G, nq, qb, D) queries; (B, Hkv, nkv, kb, D) keys/values.
+    qb_ = (
+        qp.reshape(b, nq, q_block, hkv, g, d)
+        .transpose(0, 3, 4, 1, 2, 5)
+        .astype(sdt)
+        * jnp.asarray(scale_, sdt)
+    )
+    kb_ = kp.reshape(b, nkv, kv_block, hkv, d).transpose(0, 3, 1, 2, 4)
+    vb_ = vp.reshape(b, nkv, kv_block, hkv, d).transpose(0, 3, 1, 2, 4)
+
+    rows = jnp.arange(q_block)
+    cols = jnp.arange(kv_block)
+
+    def one_q_block(i, q_tile):
+        # q_tile: (B, Hkv, G, qb, D)
+        def body(carry, j):
+            m, l, acc = carry
+            kv_j = kv_index(order, i, j, nkv)
+            k_j = jax.lax.dynamic_index_in_dim(kb_, kv_j, axis=2, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vb_, kv_j, axis=2, keepdims=False)
+            # scores/probs in score_dtype (bf16 halves the dominant HBM
+            # traffic term — EXPERIMENTS.md §Perf); softmax stats stay f32.
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk",
+                q_tile,
+                k_j.astype(sdt),
+                precision=jax.lax.Precision.DEFAULT,
+                preferred_element_type=sdt,
+            )
+            bias = _mask_bias(
+                rows + i * q_block,
+                cols + kv_j * kv_block,
+                causal=causal,
+                window=window,
+                kv_len=skv,
+            ).astype(sdt)
+            s = s + bias
+            m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+            p = jnp.exp(s - m_new.astype(sdt)[..., None])  # stays in sdt
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1).astype(jnp.float32)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_j.astype(sdt),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hkv, g, q_block), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, q_block), jnp.float32),
+            jnp.zeros((b, hkv, g, q_block, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(nkv))
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (padding)
+        return acc / l[..., None]
+
+    out = jax.vmap(one_q_block, in_axes=(0, 3), out_axes=3)(
+        jnp.arange(nq), qb_
+    )  # (B, Hkv, G, nq, qb, D)
+    out = out.transpose(0, 3, 4, 1, 2, 5).reshape(b, sq_p, hq, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array | int,
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-position decode attention against a (possibly padded) KV cache.
+
+    q: (B, 1, Hq, D); caches: (B, S_max, Hkv, D); cache_len: valid prefix
+    length (scalar or (B,)). Linear in S_max — used for decode_32k/long_500k
+    serve steps. Window applies Mistral-style SWA over absolute positions.
+    """
+    b, one, hq, d = q.shape
+    assert one == 1
+    _, s_max, hkv, _ = k_cache.shape
+    g = hq // hkv
+    scale_ = d ** -0.5 if scale is None else scale
+    lens = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) * scale_
+    pos = jnp.arange(s_max)[None, :]  # (1, S)
+    valid = pos < lens[:, None]
+    if window is not None:
+        valid &= pos > (lens[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, hq, d).astype(q.dtype)

@@ -1,0 +1,198 @@
+"""KV traversal schedules — the paper's core contribution as a composable object.
+
+The paper ("Sawtooth Wavefront Reordering", §4) changes the order in which a
+flash-attention worker streams KV tiles for consecutive Q tiles:
+
+  cyclic   : every Q tile scans KV tiles 0..n-1           (reuse distance = |KV|)
+  sawtooth : even local iterations scan 0..n-1, odd scan n-1..0
+             (mean reuse distance halves; the tail of each pass always hits)
+
+A schedule here is pure data + index arithmetic, shared by
+
+  * the pure-JAX blockwise attention (``repro.core.attention``), which scans
+    KV blocks in schedule order,
+  * the Pallas TPU kernels (``repro.kernels.flash_attention``), where the
+    schedule becomes the BlockSpec ``index_map``,
+  * the cache simulator (``repro.core.cache_sim``), which consumes the access
+    trace the schedule induces.
+
+Everything is traceable (``lax`` ops on scalar ints) so the same function
+works inside ``index_map`` and inside ``lax.scan`` bodies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Order",
+    "KVSchedule",
+    "kv_index",
+    "kv_index_host",
+    "tile_ids",
+    "num_kv_tiles_for",
+]
+
+
+class Order(str, enum.Enum):
+    """Traversal order of the KV inner loop."""
+
+    CYCLIC = "cyclic"
+    SAWTOOTH = "sawtooth"
+
+    @classmethod
+    def parse(cls, v: "Order | str") -> "Order":
+        if isinstance(v, Order):
+            return v
+        return cls(str(v).lower())
+
+
+def kv_index(order: Order | str, i, j, n_kv: int):
+    """Traced KV tile index for Q-tile ``i``, inner step ``j``.
+
+    Works on python ints and on traced scalars (usable in Pallas index_maps).
+    ``i`` is the *local* iteration number of the worker (paper Alg. 4 uses the
+    per-SM local counter, not the global tile id — with round-robin assignment
+    both have the same parity per worker, so we use the q-tile counter).
+    """
+    order = Order.parse(order)
+    if order is Order.CYCLIC:
+        return j
+    rev = (n_kv - 1) - j
+    if isinstance(i, (int, np.integer)) and isinstance(j, (int, np.integer)):
+        return int(j if i % 2 == 0 else rev)
+    return jax.lax.select(jnp.asarray(i) % 2 == 0, jnp.asarray(j), jnp.asarray(rev))
+
+
+def kv_index_host(order: Order | str, i: int, j: int, n_kv: int) -> int:
+    """Host-side (python int) version of :func:`kv_index`."""
+    order = Order.parse(order)
+    if order is Order.CYCLIC:
+        return j
+    return j if i % 2 == 0 else (n_kv - 1) - j
+
+
+def num_kv_tiles_for(
+    q_tile: int, n_kv: int, *, causal: bool, q_block: int, kv_block: int
+) -> int:
+    """Number of KV tiles a given Q tile actually touches (causal trimming).
+
+    For causal masking, Q tile ``i`` covering rows [i*q_block, (i+1)*q_block)
+    needs KV tiles up to and including the one containing its last row.
+    """
+    if not causal:
+        return n_kv
+    last_row = (q_tile + 1) * q_block - 1
+    return min(n_kv, last_row // kv_block + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSchedule:
+    """A full traversal schedule for one attention problem instance.
+
+    Attributes:
+      order: cyclic or sawtooth.
+      n_q: number of Q tiles.
+      n_kv: number of KV tiles.
+      causal: whether causal masking trims the KV range per Q tile.
+      q_block / kv_block: tile sizes (rows) — only used for causal trimming
+        and for the cache-trace sector weighting.
+    """
+
+    order: Order
+    n_q: int
+    n_kv: int
+    causal: bool = False
+    q_block: int = 128
+    kv_block: int = 128
+
+    def __post_init__(self):
+        object.__setattr__(self, "order", Order.parse(self.order))
+        if self.n_q <= 0 or self.n_kv <= 0:
+            raise ValueError(f"empty schedule: n_q={self.n_q} n_kv={self.n_kv}")
+
+    # ---- per-worker iteration ------------------------------------------------
+
+    def kv_range(self, q_tile: int) -> int:
+        return num_kv_tiles_for(
+            q_tile,
+            self.n_kv,
+            causal=self.causal,
+            q_block=self.q_block,
+            kv_block=self.kv_block,
+        )
+
+    def kv_order(self, q_tile: int, local_iter: int | None = None) -> list[int]:
+        """The sequence of KV tile ids visited for ``q_tile``.
+
+        ``local_iter`` is the worker-local iteration parity driver; defaults to
+        the q_tile id itself (single-worker view / round-robin with G workers
+        keeps parity consistent per worker).
+        """
+        li = q_tile if local_iter is None else local_iter
+        n = self.kv_range(q_tile)
+        idx = [kv_index_host(self.order, li, j, n) for j in range(n)]
+        return idx
+
+    # ---- global traces (cache simulation) ------------------------------------
+
+    def worker_assignments(self, n_workers: int) -> list[list[int]]:
+        """Round-robin (grid-stride) Q-tile assignment, paper Alg. 2."""
+        if n_workers <= 0:
+            raise ValueError("n_workers must be positive")
+        return [list(range(w, self.n_q, n_workers)) for w in range(n_workers)]
+
+    def wavefront_trace(self, n_workers: int) -> Iterator[tuple[int, str, int]]:
+        """Lock-step wavefront access trace: yields (worker, tensor, tile).
+
+        Models the paper's observation (§3.4) that persistent CTAs progress in
+        a largely synchronized manner: at each global step every still-active
+        worker issues the access for its current (q_tile, j) position, in
+        worker order. Tensors: 'Q' (once per q tile), 'K','V' per inner step,
+        'O' at tile end.  Tile ids for K/V are KV tile ids; Q/O tiles use the
+        q-tile id (distinct tensor namespaces — the simulator keys on
+        (tensor, tile)).
+        """
+        assignments = self.worker_assignments(n_workers)
+        # Per-worker iterator state: (assignment position, inner position).
+        pos = [0] * len(assignments)
+        inner = [0] * len(assignments)
+        active = [len(a) > 0 for a in assignments]
+        emitted_q = [False] * len(assignments)
+        while any(active):
+            for w, assign in enumerate(assignments):
+                if not active[w]:
+                    continue
+                q_tile = assign[pos[w]]
+                local_iter = pos[w]
+                n = self.kv_range(q_tile)
+                if not emitted_q[w]:
+                    yield (w, "Q", q_tile)
+                    emitted_q[w] = True
+                j = inner[w]
+                kv = kv_index_host(self.order, local_iter, j, n)
+                yield (w, "K", kv)
+                yield (w, "V", kv)
+                inner[w] += 1
+                if inner[w] >= n:
+                    yield (w, "O", q_tile)
+                    inner[w] = 0
+                    emitted_q[w] = False
+                    pos[w] += 1
+                    if pos[w] >= len(assign):
+                        active[w] = False
+
+    def flat_trace(self, n_workers: int = 1) -> list[tuple[str, int]]:
+        """Trace without worker ids (cache sees the interleaved stream)."""
+        return [(t, tile) for (_, t, tile) in self.wavefront_trace(n_workers)]
+
+
+def tile_ids(seq_len: int, block: int) -> int:
+    """Number of tiles covering ``seq_len`` rows with ``block``-row tiles."""
+    return -(-seq_len // block)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticPacked, make_batch_iterator
+
+__all__ = ["DataConfig", "SyntheticPacked", "make_batch_iterator"]

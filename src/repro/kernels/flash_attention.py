@@ -1,0 +1,287 @@
+"""Pallas TPU flash-attention forward kernel with schedulable KV traversal.
+
+The paper's Sawtooth Wavefront Reordering (Alg. 4) is expressed *entirely in
+the BlockSpec index_map*: the kernel body is identical for cyclic and
+sawtooth. On TPU the schedule controls the HBM->VMEM DMA stream of the
+Pallas software pipeline; consecutive grid steps that map to the same block
+elide the copy, so the sawtooth boundary block (last block of pass i ==
+first block of pass i+1) is fetched once instead of twice, and the mean HBM
+reuse distance of the KV stream halves (see kernels/traffic.py for the
+counting model and DESIGN.md §2 for the GB10->TPU adaptation).
+
+Dataflow is the paper's split-Q (Alg. 1): the Q tile is resident (one per
+grid row), K/V tiles stream. Causal and sliding-window ranges are *clamped
+in the index_map* so out-of-range steps re-map to a boundary block (elided
+fetch) with compute skipped — the TPU analogue of causal grid trimming.
+
+Layout: q (B, Sq, Hq, D), k/v (B, Skv, Hkv, D), GQA folded by stacking the
+``G = Hq // Hkv`` query groups along the row axis per KV head.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:  # jax >= 0.7 name, with fallback for older spellings
+    from jax.experimental.pallas import tpu as pltpu
+
+    _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _CompilerParams = None
+
+from repro.core.schedule import Order
+
+__all__ = ["flash_attention_fwd", "MASK_VALUE"]
+
+MASK_VALUE = -0.7 * float(np.finfo(np.float32).max)
+LANES = 128
+
+
+def _kv_bounds(i, *, nq, nkv, q_block, kv_block, causal, window):
+    """Inclusive [lo, hi] KV-block range visible to q-tile row ``i``.
+
+    ``i`` indexes the G-folded q tiles; the sequence tile is ``i % nq``.
+    Returns traced int32 scalars.
+    """
+    q_tile = jax.lax.rem(i, nq)
+    if causal:
+        last_row = q_tile * q_block + (q_block - 1)
+        hi = jnp.minimum(nkv - 1, last_row // kv_block)
+    else:
+        hi = jnp.int32(nkv - 1)
+    if window is not None:
+        first_visible = jnp.maximum(q_tile * q_block - (window - 1), 0)
+        lo = first_visible // kv_block
+    else:
+        lo = jnp.int32(0)
+    return lo, hi
+
+
+def _kv_block_index(order: Order, i, j, *, nq, nkv, q_block, kv_block, causal, window):
+    """KV block fetched at grid step (i, j) plus the compute-valid predicate."""
+    lo, hi = _kv_bounds(
+        i, nq=nq, nkv=nkv, q_block=q_block, kv_block=kv_block, causal=causal, window=window
+    )
+    steps = hi - lo + 1
+    jc = jnp.minimum(j, steps - 1)  # clamp out-of-range steps to boundary
+    fwd = lo + jc
+    if order is Order.SAWTOOTH:
+        bwd = hi - jc
+        jj = jax.lax.select(jax.lax.rem(i, 2) == 0, fwd, bwd)
+    else:
+        jj = fwd
+    valid = j < steps
+    return jj, valid
+
+
+def _fwd_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    order: Order,
+    nq: int,
+    nkv: int,
+    q_block: int,
+    kv_block: int,
+    causal: bool,
+    window: Optional[int],
+    kv_len: int,
+    scale: float,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    jj, valid = _kv_block_index(
+        order,
+        i,
+        j,
+        nq=nq,
+        nkv=nkv,
+        q_block=q_block,
+        kv_block=kv_block,
+        causal=causal,
+        window=window,
+    )
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, MASK_VALUE)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(valid)
+    def _compute():
+        q = q_ref[0]  # (qb, D)
+        k = k_ref[0]  # (kb, D)
+        v = v_ref[0]
+        s = (
+            jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            * scale
+        )  # (qb, kb)
+
+        q_tile = jax.lax.rem(i, nq)
+        rows = (
+            jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+            + q_tile * q_block
+        )
+        cols = (
+            jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1) + jj * kv_block
+        )
+        ok = cols < kv_len
+        if causal:
+            ok &= cols <= rows
+        if window is not None:
+            ok &= cols > rows - window
+        s = jnp.where(ok, s, MASK_VALUE)
+
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Explicit mask on p: with sawtooth-causal the *diagonal* block is
+        # visited first on odd passes, where early rows have no valid columns
+        # yet — exp(mask - mask) would poison l without this.
+        p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)  # (qb, 1)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype),
+            v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(j == nkv - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked (padding) rows
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    rem = (-x.shape[axis]) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "order",
+        "causal",
+        "window",
+        "scale",
+        "q_block",
+        "kv_block",
+        "interpret",
+    ),
+)
+def flash_attention_fwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    order: Order | str = Order.SAWTOOTH,
+    causal: bool = False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_block: int = 256,
+    kv_block: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Forward flash attention via pl.pallas_call. See module docstring."""
+    order = Order.parse(order)
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}")
+    g = hq // hkv
+    scale_ = float(d**-0.5 if scale is None else scale)
+
+    q_block = min(q_block, max(8, 1 << (sq - 1).bit_length()))
+    kv_block = min(kv_block, max(128, 1 << (skv - 1).bit_length()))
+
+    # --- fold GQA: (B, Sq, Hkv, G, D) -> rows grouped per kv head -----------
+    qf = q.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,Sq,D)
+    qf = _pad_axis(qf, 3, q_block)
+    sq_p = qf.shape[3]
+    nq = sq_p // q_block
+    qf = qf.reshape(b * hkv, g * sq_p, d)
+    qf = _pad_axis(qf, 2, LANES)
+
+    kf = _pad_axis(k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d), 1, kv_block)
+    vf = _pad_axis(v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d), 1, kv_block)
+    kf = _pad_axis(kf, 2, LANES)
+    vf = _pad_axis(vf, 2, LANES)
+    skv_p = kf.shape[1]
+    nkv = skv_p // kv_block
+    dp = kf.shape[2]
+
+    kv_map_kwargs = dict(
+        nq=nq, nkv=nkv, q_block=q_block, kv_block=kv_block, causal=causal, window=window
+    )
+
+    def q_map(bh, i, j):
+        return (bh, i, 0)
+
+    def kv_map(bh, i, j):
+        jj, _ = _kv_block_index(order, i, j, **kv_map_kwargs)
+        return (bh, jj, 0)
+
+    kernel = functools.partial(
+        _fwd_kernel,
+        order=order,
+        kv_len=skv,
+        scale=scale_,
+        **kv_map_kwargs,
+    )
+
+    grid = (b * hkv, g * nq, nkv)
+    compiler_params = None
+    if _CompilerParams is not None and not interpret:
+        compiler_params = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, dp), q_map),
+            pl.BlockSpec((1, kv_block, dp), kv_map),
+            pl.BlockSpec((1, kv_block, dp), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, dp), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g * sq_p, dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, LANES), jnp.float32),
+            pltpu.VMEM((q_block, LANES), jnp.float32),
+            pltpu.VMEM((q_block, dp), jnp.float32),
+        ],
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )(qf, kf, vf)
+
+    out = out.reshape(b, hkv, g, sq_p, dp)[:, :, :, :sq, :d]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)

@@ -1,0 +1,187 @@
+"""Pallas TPU decode-attention kernel (one new token vs a long KV cache).
+
+Used by ``serve_step`` for the decode_32k / long_500k shapes. The KV cache is
+streamed chunk-by-chunk with online softmax; per-batch valid lengths and
+sliding windows are carried by a precomputed (B, S_max) mask operand so the
+kernel needs no scalar plumbing.
+
+Sawtooth here alternates the chunk-scan direction across consecutive
+(batch·kv-head) grid rows. Unlike prefill there is no *intrinsic* KV reuse
+between rows (different heads/batches read different cache lines), so this
+is exposed for symmetry and measurement, not claimed as a win — see
+DESIGN.md §2 and kernels/traffic.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _CompilerParams = None
+
+from repro.core.schedule import Order
+from repro.kernels.flash_attention import MASK_VALUE, LANES, _pad_axis
+
+__all__ = ["flash_decode_fwd"]
+
+
+def _chunk_index(order: Order, bh, c, n_chunks: int):
+    if order is Order.SAWTOOTH:
+        return jax.lax.select(
+            jax.lax.rem(bh, 2) == 0, c, (n_chunks - 1) - c
+        )
+    return c
+
+
+def _decode_kernel(
+    q_ref,  # (1, Gp, D)
+    k_ref,  # (1, ck, D)
+    v_ref,
+    mask_ref,  # (1, ck) f32 0/1
+    o_ref,  # (1, Gp, D)
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    n_chunks: int,
+    scale: float,
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, MASK_VALUE)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = (
+        jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * scale
+    )  # (Gp, ck)
+    ok = mask_ref[0] > 0.0  # (ck,)
+    s = jnp.where(ok[None, :], s, MASK_VALUE)
+
+    m_prev = m_scr[:, :1]
+    l_prev = l_scr[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(ok[None, :], jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(c == n_chunks - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("order", "window", "scale", "chunk", "interpret"),
+)
+def flash_decode_fwd(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array | int,
+    *,
+    order: Order | str = Order.CYCLIC,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    chunk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q (B,1,Hq,D); caches (B,S_max,Hkv,D); cache_len scalar or (B,)."""
+    order = Order.parse(order)
+    b, one, hq, d = q.shape
+    assert one == 1, "decode kernel takes a single query position"
+    _, s_max, hkv, _ = k_cache.shape
+    g = hq // hkv
+    scale_ = float(d**-0.5 if scale is None else scale)
+    chunk = min(chunk, max(128, 1 << (s_max - 1).bit_length()))
+
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    pos = jnp.arange(s_max, dtype=jnp.int32)[None, :]
+    ok = pos < lens[:, None]
+    if window is not None:
+        ok &= pos > (lens[:, None] - 1 - window)
+    mask = ok.astype(jnp.float32)  # (B, S_max)
+    mask = _pad_axis(mask, 1, chunk)
+
+    g_pad = max(8, g)
+    qf = q.reshape(b, hkv, g, d).reshape(b * hkv, g, d)
+    qf = _pad_axis(_pad_axis(qf, 1, g_pad), 2, LANES)
+    kf = _pad_axis(
+        _pad_axis(k_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s_max, d), 1, chunk),
+        2,
+        LANES,
+    )
+    vf = _pad_axis(
+        _pad_axis(v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s_max, d), 1, chunk),
+        2,
+        LANES,
+    )
+    dp = kf.shape[2]
+    n_chunks = kf.shape[1] // chunk
+
+    def q_map(bh, c):
+        return (bh, 0, 0)
+
+    def kv_map(bh, c):
+        return (bh, _chunk_index(order, bh, c, n_chunks), 0)
+
+    def mask_map(bh, c):
+        return (bh // hkv, _chunk_index(order, bh, c, n_chunks))
+
+    kernel = functools.partial(_decode_kernel, n_chunks=n_chunks, scale=scale_)
+    compiler_params = None
+    if _CompilerParams is not None and not interpret:
+        compiler_params = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, g_pad, dp), q_map),
+            pl.BlockSpec((1, chunk, dp), kv_map),
+            pl.BlockSpec((1, chunk, dp), kv_map),
+            pl.BlockSpec((1, chunk), mask_map),
+        ],
+        out_specs=pl.BlockSpec((1, g_pad, dp), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, LANES), jnp.float32),
+            pltpu.VMEM((g_pad, LANES), jnp.float32),
+            pltpu.VMEM((g_pad, dp), jnp.float32),
+        ],
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )(qf, kf, vf, mask)
+
+    out = out.reshape(b, hkv, g_pad, dp)[:, :, :g, :d]
+    return out.reshape(b, 1, hq, d)

@@ -1,0 +1,223 @@
+"""Public, differentiable, platform-dispatched kernel ops.
+
+``attention`` / ``attention_decode`` are what the model layers call. Each op:
+
+  * dispatches to the Pallas TPU kernel on TPU backends, the blockwise pure
+    JAX path elsewhere (CPU dry-run / tests), or an explicit impl override
+    ('pallas' | 'pallas_interpret' | 'xla' | 'reference'),
+  * carries the KV schedule (cyclic / sawtooth) through to whichever path,
+  * is differentiable: forward may run Pallas; backward recomputes through
+    the mathematically-identical blockwise JAX path (memory-safe flash-style
+    recompute, see DESIGN.md §7.5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as core_attn
+from repro.core.schedule import Order
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_decode import flash_decode_fwd
+from repro.kernels.ssd import ssd_fwd
+
+__all__ = ["attention", "attention_decode", "ssd", "default_impl"]
+
+Impl = str  # 'auto' | 'pallas' | 'pallas_interpret' | 'xla' | 'reference'
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve(impl: Impl) -> str:
+    return default_impl() if impl == "auto" else impl
+
+
+def _fwd_dispatch(q, k, v, *, impl, order, causal, window, scale, q_block, kv_block, score_dtype):
+    impl = _resolve(impl)
+    if impl in ("pallas", "pallas_interpret"):
+        return flash_attention_fwd(
+            q,
+            k,
+            v,
+            order=order,
+            causal=causal,
+            window=window,
+            scale=scale,
+            q_block=q_block,
+            kv_block=kv_block,
+            interpret=(impl == "pallas_interpret"),
+        )
+    if impl == "xla":
+        return core_attn.flash_attention(
+            q,
+            k,
+            v,
+            order=order,
+            causal=causal,
+            window=window,
+            scale=scale,
+            q_block=q_block,
+            kv_block=kv_block,
+            score_dtype=score_dtype,
+        )
+    if impl == "reference":
+        return kref.flash_attention_ref(
+            q, k, v, causal=causal, window=window, scale=scale
+        )
+    raise ValueError(f"unknown attention impl: {impl!r}")
+
+
+@functools.lru_cache(maxsize=None)
+def _make_attention(impl, order, causal, window, scale, q_block, kv_block, score_dtype):
+    """Build a custom_vjp attention fn for one static configuration."""
+
+    cfg = dict(
+        impl=impl,
+        order=order,
+        causal=causal,
+        window=window,
+        scale=scale,
+        q_block=q_block,
+        kv_block=kv_block,
+        score_dtype=score_dtype,
+    )
+
+    def _bwd_fn(q, k, v):
+        # Backward always differentiates the blockwise JAX path (order kept:
+        # the schedule is math-preserving, so grads match any forward impl).
+        return core_attn.flash_attention(
+            q,
+            k,
+            v,
+            order=order,
+            causal=causal,
+            window=window,
+            scale=scale,
+            q_block=q_block,
+            kv_block=kv_block,
+            score_dtype=score_dtype,
+        )
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return _fwd_dispatch(q, k, v, **cfg)
+
+    def fwd(q, k, v):
+        return attn(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(_bwd_fn, q, k, v)
+        return vjp(g)
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    order: Order | str = Order.SAWTOOTH,
+    causal: bool = False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_block: int = 256,
+    kv_block: int = 256,
+    impl: Impl = "auto",
+    score_dtype: str = "float32",
+) -> jax.Array:
+    """Flash attention, layout (B, S, H, D); GQA via Hq > Hkv."""
+    order = Order.parse(order)
+    fn = _make_attention(impl, order, causal, window, scale, q_block, kv_block, score_dtype)
+    return fn(q, k, v)
+
+
+def attention_decode(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len,
+    *,
+    order: Order | str = Order.CYCLIC,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    chunk: int = 512,
+    impl: Impl = "auto",
+) -> jax.Array:
+    """Single-token decode attention vs a KV cache. Not differentiated."""
+    order = Order.parse(order)
+    impl = _resolve(impl)
+    if impl in ("pallas", "pallas_interpret"):
+        return flash_decode_fwd(
+            q,
+            k_cache,
+            v_cache,
+            cache_len,
+            order=order,
+            window=window,
+            scale=scale,
+            chunk=chunk,
+            interpret=(impl == "pallas_interpret"),
+        )
+    if impl in ("xla", "reference"):
+        return core_attn.decode_attention(
+            q, k_cache, v_cache, cache_len, window=window, scale=scale
+        )
+    raise ValueError(f"unknown decode impl: {impl!r}")
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 SSD op (Pallas on TPU, chunked jnp elsewhere; bwd via jnp recompute)
+# --------------------------------------------------------------------------
+
+
+def _ssd_jnp(x, dt, a, b, c, init_state, chunk):
+    from repro.models.ssm import ssd_chunked  # lazy: avoids import cycle
+
+    return ssd_chunked(x, dt, a, b, c, chunk=chunk, init_state=init_state)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_ssd(impl, chunk):
+    def _dispatch(x, dt, a, b, c, init_state):
+        r = _resolve(impl)
+        if r in ("pallas", "pallas_interpret"):
+            return ssd_fwd(
+                x, dt, a, b, c, init_state=init_state, chunk=chunk,
+                interpret=(r == "pallas_interpret"),
+            )
+        return _ssd_jnp(x, dt, a, b, c, init_state, chunk)
+
+    @jax.custom_vjp
+    def op(x, dt, a, b, c, init_state):
+        return _dispatch(x, dt, a, b, c, init_state)
+
+    def fwd(x, dt, a, b, c, init_state):
+        return op(x, dt, a, b, c, init_state), (x, dt, a, b, c, init_state)
+
+    def bwd(res, g):
+        x, dt, a, b, c, init_state = res
+        _, vjp = jax.vjp(
+            lambda *args: _ssd_jnp(*args, chunk), x, dt, a, b, c, init_state
+        )
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def ssd(x, dt, a, b, c, *, init_state=None, chunk: int = 128, impl: Impl = "auto"):
+    """Mamba-2 SSD scan: (y, final_state). Layouts as kernels.ref.ssd_ref."""
+    if init_state is None:
+        bsz, _, h, p = x.shape
+        init_state = jnp.zeros((bsz, h, p, b.shape[-1]), jnp.float32)
+    return _make_ssd(impl, chunk)(x, dt, a, b, c, init_state)

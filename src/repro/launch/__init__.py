@@ -1,0 +1,5 @@
+# NOTE: repro.launch.dryrun sets XLA_FLAGS at import; import it only as a
+# script entry point (python -m repro.launch.dryrun), never from library code.
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_local_mesh", "make_production_mesh"]

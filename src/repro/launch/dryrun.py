@@ -1,0 +1,394 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh) cell.
+
+For each cell this
+  1. builds the full-size config and the pjit-sharded step function
+     (train_step / prefill_step / serve_step per the shape kind),
+  2. ``.lower().compile()``s it against ShapeDtypeStruct inputs (no
+     allocation) on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh,
+  3. records memory_analysis / cost_analysis / per-collective HLO bytes and
+     the derived roofline terms into artifacts/dryrun/<cell>.json.
+
+Must be run as a module: PYTHONPATH=src python -m repro.launch.dryrun
+(the XLA_FLAGS lines above run before any jax import — assignment rule).
+
+long_500k is skipped (and recorded as such) for pure full-attention archs;
+SWA / SSM / hybrid archs run it (DESIGN.md §5).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo as hlo_mod
+from repro.analysis import roofline as rf
+from repro.configs import ARCH_IDS, SHAPES, ParallelConfig, TrainConfig, get_config
+from repro.dist import sharding as shd
+from repro.dist.context import activation_rules
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import build_model
+from repro.train.step import make_train_state, make_train_step, state_shardings
+
+DEFAULT_OUT = "artifacts/dryrun"
+
+# archs where long_500k decode is meaningful (sub-quadratic / bounded KV)
+LONG_OK = {"mixtral-8x7b", "mamba2-130m", "zamba2-2_7b"}
+ALL_ARCHS = [a for a in ARCH_IDS if a != "paper-gb10"]
+
+
+def dryrun_parallel_cfg(mesh, shape_kind: str, overrides: dict | None = None) -> ParallelConfig:
+    kw: dict = {}
+    if "pod" not in mesh.shape:
+        kw["fsdp_axes"] = ("data",)
+        kw["data_axes"] = ("data",)
+    if shape_kind == "train":
+        kw["microbatches"] = 8
+    if overrides:
+        kw.update(overrides)
+    return ParallelConfig(**kw)
+
+
+def cfg_for_dryrun(arch: str, overrides: dict | None = None):
+    cfg = get_config(arch)
+    kw = dict(attn_impl="xla", remat="full")
+    if overrides:
+        kw.update(overrides)
+    return cfg.with_(**kw)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    mesh_name: str,
+    *,
+    cfg_overrides: dict | None = None,
+    par_overrides: dict | None = None,
+    reduced: bool = False,
+):
+    """Returns (record dict, lowered, compiled)."""
+    shape = SHAPES[shape_name]
+    cfg = cfg_for_dryrun(arch, cfg_overrides)
+    if reduced:
+        cfg = cfg.reduced().with_(attn_impl="xla")
+        shape = shape.reduced()
+    pcfg = dryrun_parallel_cfg(mesh, shape.kind, par_overrides)
+    lm = build_model(cfg)
+
+    rules = None
+    if pcfg.seq_shard_activations:
+        from jax.sharding import PartitionSpec as P
+
+        dp = tuple(a for a in pcfg.data_axes if a in mesh.shape)
+        rules = {
+            "residual": P(dp, pcfg.tensor_axis, None),
+            "moe_tokens": P((dp + (pcfg.tensor_axis,)) if pcfg.tensor_axis in mesh.shape else dp, None),
+        }
+
+    t0 = time.time()
+    with jax.set_mesh(mesh), activation_rules(rules):
+        params_sds = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+        batch_sds = lm.input_specs(shape, reduced=reduced)
+        if shape.kind == "train":
+            micro = pcfg.microbatches
+            if shape.global_batch % max(micro, 1):
+                pcfg = dataclasses.replace(pcfg, microbatches=1)
+            tcfg = TrainConfig()
+            state_sds = jax.eval_shape(
+                lambda k: make_train_state(lm, tcfg, k), jax.random.PRNGKey(0)
+            )
+            step, _ = make_train_step(lm, tcfg, pcfg, mesh)
+            st_sh = state_shardings(state_sds, pcfg, mesh)
+            b_sh = shd.batch_shardings(batch_sds, pcfg, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            p_sh = shd.param_shardings(params_sds, pcfg, mesh)
+            b_sh = shd.batch_shardings(batch_sds, pcfg, mesh)
+            fn = lambda p, b: lm.prefill(p, b, shape.seq_len)
+            lowered = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(
+                params_sds, batch_sds
+            )
+        else:  # decode
+            max_len = shape.seq_len
+            _, caches_sds = jax.eval_shape(
+                lambda p, b: lm.prefill(p, b, max_len), params_sds, batch_sds
+            )
+            tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            p_sh = shd.param_shardings(params_sds, pcfg, mesh)
+            t_sh = shd.batch_shardings(tok_sds, pcfg, mesh)
+            c_sh = shd.cache_shardings(caches_sds, pcfg, mesh)
+            lowered = jax.jit(
+                lm.decode_step, in_shardings=(p_sh, t_sh, c_sh), donate_argnums=(2,)
+            ).lower(params_sds, tok_sds, caches_sds)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = dict(compiled.cost_analysis() or {})
+    hlo_text = compiled.as_text()
+    coll = hlo_mod.collective_bytes(hlo_text)
+    chips = mesh.devices.size
+    terms = rf.analyze(
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        chips=chips,
+        cost={k: cost.get(k, 0.0) for k in ("flops", "bytes accessed")},
+        coll=coll,
+        cfg=cfg,
+        shape_cfg=shape,
+    )
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "cost": {"flops": cost.get("flops", 0.0), "bytes_accessed": cost.get("bytes accessed", 0.0)},
+        "collectives": coll,
+        "roofline": terms.to_row(),
+        "param_count": rf.param_count(cfg),
+        "active_param_count": rf.active_param_count(cfg),
+    }
+    return record, lowered, compiled
+
+
+def should_skip(arch: str, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return "long_500k needs sub-quadratic attention; pure full-attention arch (DESIGN.md §5)"
+    return None
+
+
+# --------------------------------------------------------------------------
+# trip-count-corrected roofline (XLA cost_analysis counts while bodies ONCE;
+# we compile python-unrolled depth-1 and depth-2 variants and extrapolate
+# affinely to full depth — exact for homogeneous layer stacks)
+# --------------------------------------------------------------------------
+
+
+def _depth_units(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.ssm.shared_attn_every
+    return cfg.n_layers
+
+
+def _depth_overrides(cfg, units: int) -> dict:
+    if cfg.family == "hybrid":
+        return {"n_layers": units * cfg.ssm.shared_attn_every}
+    if cfg.family == "encdec":
+        return {"n_layers": units, "n_encoder_layers": units}
+    return {"n_layers": units}
+
+
+def extrapolate_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+                     *, cfg_overrides: dict | None = None,
+                     par_overrides: dict | None = None):
+    """Roofline record with while-trip-count correction."""
+    full_cfg = cfg_for_dryrun(arch, cfg_overrides)
+    units = _depth_units(full_cfg)
+    recs = {}
+    for u in (1, 2):
+        ov = dict(cfg_overrides or {})
+        ov.update(_depth_overrides(full_cfg, u))
+        ov["scan_layers"] = False
+        pov = dict(par_overrides or {})
+        pov["microbatches"] = 1  # flops/bytes are ~batch-linear, m-invariant
+        rec, _, _ = lower_cell(
+            arch, shape_name, mesh, mesh_name, cfg_overrides=ov, par_overrides=pov
+        )
+        recs[u] = rec
+
+    def lin(f):
+        # affine in depth; clamped below at the measured depth-2 value (XLA
+        # CSE can make depth-1 modules anomalously expensive, which would
+        # extrapolate to nonsense-negative slopes)
+        a, b = f(recs[1]), f(recs[2])
+        return max(a + (units - 1) * (b - a), b, 0.0)
+
+    cost = {
+        "flops": lin(lambda r: r["cost"]["flops"]),
+        "bytes accessed": lin(lambda r: r["cost"]["bytes_accessed"]),
+    }
+    kinds = set(recs[1]["collectives"]) | set(recs[2]["collectives"])
+    coll = {k: lin(lambda r: r["collectives"].get(k, 0.0)) for k in kinds}
+    shape = SHAPES[shape_name]
+    terms = rf.analyze(
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        chips=mesh.devices.size,
+        cost=cost,
+        coll=coll,
+        cfg=full_cfg,
+        shape_cfg=shape,
+    )
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "ok",
+        "method": "unrolled depth-1/2 affine extrapolation to full depth "
+                  f"({units} units), microbatches=1",
+        "depth_units": units,
+        "cost": cost,
+        "collectives": coll,
+        "roofline": terms.to_row(),
+        "depth1": {"cost": recs[1]["cost"], "collectives": recs[1]["collectives"]},
+        "depth2": {"cost": recs[2]["cost"], "collectives": recs[2]["collectives"]},
+    }
+
+
+def run_extrapolation(archs, shapes, out_dir: str, *, resume: bool = True,
+                      mesh_name: str = "single", suffix: str = "rf",
+                      cfg_overrides: dict | None = None,
+                      par_overrides: dict | None = None):
+    """§Roofline pass (single-pod only, per assignment)."""
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            cell = f"{arch}__{shape_name}__{mesh_name}"
+            path = os.path.join(out_dir, f"{cell}.{suffix}.json")
+            if resume and os.path.exists(path):
+                with open(path) as f:
+                    results.append(json.load(f))
+                print(f"[skip-cached] rf {cell}")
+                continue
+            if should_skip(arch, shape_name):
+                continue
+            mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+            try:
+                rec = extrapolate_cell(
+                    arch, shape_name, mesh, mesh_name,
+                    cfg_overrides=cfg_overrides, par_overrides=par_overrides,
+                )
+                r = rec["roofline"]
+                print(
+                    f"[rf] {cell}: bottleneck={r['bottleneck']} "
+                    f"Tc={r['compute_s']:.4f} Tm={r['memory_s']:.4f} "
+                    f"Tx={r['collective_s']:.4f} util={r['hw_flops_util']:.3f} "
+                    f"useful={r['useful_ratio']:.3f}"
+                )
+            except Exception as e:
+                rec = {
+                    "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                print(f"[rf ERROR] {cell}: {type(e).__name__}: {e}")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+            results.append(rec)
+    return results
+
+
+def run(archs, shapes, meshes, out_dir: str, *, resume: bool = True, save_hlo: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_name in meshes:
+                cell = f"{arch}__{shape_name}__{mesh_name}"
+                path = os.path.join(out_dir, cell + ".json")
+                if resume and os.path.exists(path):
+                    with open(path) as f:
+                        rec = json.load(f)
+                    results.append(rec)
+                    print(f"[skip-cached] {cell}: {rec['status']}")
+                    continue
+                skip = should_skip(arch, shape_name)
+                if skip:
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "skipped", "reason": skip,
+                    }
+                else:
+                    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+                    try:
+                        rec, lowered, compiled = lower_cell(
+                            arch, shape_name, mesh, mesh_name
+                        )
+                        if save_hlo:
+                            with open(os.path.join(out_dir, cell + ".hlo.txt"), "w") as f:
+                                f.write(compiled.as_text())
+                        r = rec["roofline"]
+                        print(
+                            f"[ok] {cell}: compile={rec['compile_s']}s "
+                            f"flops/dev={rec['cost']['flops']:.3e} "
+                            f"coll/dev={rec['collectives'].get('total',0):.3e}B "
+                            f"bottleneck={r['bottleneck']} util={r['hw_flops_util']:.3f}"
+                        )
+                        del lowered, compiled
+                    except Exception as e:
+                        rec = {
+                            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                            "status": "error", "error": f"{type(e).__name__}: {e}",
+                            "traceback": traceback.format_exc()[-4000:],
+                        }
+                        print(f"[ERROR] {cell}: {type(e).__name__}: {e}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+                results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped, {n_err} errors / {len(results)} cells")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id(s), comma-sep, or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name(s) or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument(
+        "--roofline", action="store_true",
+        help="run the trip-count-corrected roofline pass (single-pod)",
+    )
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    if args.roofline:
+        results = run_extrapolation(archs, shapes, args.out, resume=not args.no_resume)
+    else:
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        results = run(
+            archs, shapes, meshes, args.out, resume=not args.no_resume, save_hlo=args.save_hlo
+        )
+    if any(r["status"] == "error" for r in results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

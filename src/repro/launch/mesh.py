@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+Functions, never module-level constants: importing this module must not
+touch jax device state (assignment rule; also keeps smoke tests on 1 CPU
+device honest).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def _axis_types(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_axis_types(len(axes)))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=_axis_types(2)
+    )

@@ -1,0 +1,188 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block
+applied every k layers (arXiv:2411.15242).
+
+The shared block takes concat(hidden, initial_embedding) through a down
+projection (the Zamba concat trick), runs GQA attention + SwiGLU with shared
+parameters at every application site, and adds back to the residual stream.
+Per-invocation LoRA deltas from the paper are omitted (DESIGN.md §5).
+
+Layers are scanned in groups of ``shared_attn_every`` Mamba blocks followed
+by one shared-block application; each application site keeps its own KV
+cache during serving.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.context import constrain
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models import transformer as T
+
+__all__ = [
+    "hybrid_init",
+    "hybrid_apply",
+    "hybrid_prefill",
+    "hybrid_decode",
+    "hybrid_init_caches",
+    "n_groups",
+]
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    every = cfg.ssm.shared_attn_every
+    assert every > 0 and cfg.n_layers % every == 0, (cfg.n_layers, every)
+    return cfg.n_layers // every
+
+
+def _mamba_layer_init(key, cfg: ModelConfig) -> dict:
+    kl, km = L.split_keys(key, 2)
+    return {
+        "ln": L.rmsnorm_init(cfg.d_model, cfg.parameter_dtype()),
+        "mamba": ssm.mamba_init(km, cfg),
+    }
+
+
+def hybrid_init(key, cfg: ModelConfig) -> dict:
+    k_layers, k_sh_in, k_attn, k_ffn = L.split_keys(key, 4)
+    pd = cfg.parameter_dtype()
+    keys = jnp.stack(L.split_keys(k_layers, cfg.n_layers))
+    mamba_layers = jax.vmap(lambda k: _mamba_layer_init(k, cfg))(keys)
+    # reshape stacked leaves to (groups, every, ...)
+    g, e = n_groups(cfg), cfg.ssm.shared_attn_every
+    mamba_layers = jax.tree.map(
+        lambda x: x.reshape((g, e) + x.shape[1:]), mamba_layers
+    )
+    shared = {
+        "proj_in": L.dense_init(k_sh_in, 2 * cfg.d_model, cfg.d_model, dtype=pd),
+        "ln_attn": L.rmsnorm_init(cfg.d_model, pd),
+        "attn": T.attn_init(k_attn, cfg),
+        "ln_ffn": L.rmsnorm_init(cfg.d_model, pd),
+        "ffn": T.ffn_init(k_ffn, cfg),
+    }
+    return {"mamba": mamba_layers, "shared": shared}
+
+
+def _shared_block(shared, cfg, h, h0, positions):
+    zin = L.dense(
+        shared["proj_in"], jnp.concatenate([h, h0], axis=-1), dtype=cfg.activation_dtype()
+    )
+    a = T.attn_apply(
+        shared["attn"],
+        cfg,
+        L.rmsnorm(shared["ln_attn"], zin, cfg.norm_eps),
+        positions=positions,
+        causal=True,
+    )
+    z = zin + a
+    f = T.ffn_apply(shared["ffn"], cfg, L.rmsnorm(shared["ln_ffn"], z, cfg.norm_eps))
+    return h + (z + f - zin)  # residual contribution of the shared block
+
+
+def hybrid_apply(params, cfg: ModelConfig, x, positions):
+    shared = params["shared"]
+    h0 = x
+
+    def group(h, gp):
+        def inner(hh, lp):
+            return hh + ssm.mamba_apply(
+                lp["mamba"], cfg, L.rmsnorm(lp["ln"], hh, cfg.norm_eps)
+            ), None
+
+        h, _ = T.layer_scan(cfg, inner, h, gp)
+        h = _shared_block(shared, cfg, h, h0, positions)
+        return constrain(h, "residual"), jnp.zeros((), jnp.float32)
+
+    group = T.remat_wrap(group, cfg)
+    h, _ = T.layer_scan(cfg, group, x, params["mamba"])
+    return h, jnp.zeros(())
+
+
+def hybrid_init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    g, e = n_groups(cfg), cfg.ssm.shared_attn_every
+    one_state = ssm.mamba_init_state(cfg, batch)
+    mamba = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (g, e) + x.shape), one_state
+    )
+    attn = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (g,) + x.shape),
+        T.init_cache(cfg, batch, max_len),
+    )
+    return {"mamba": mamba, "attn": attn, "len": jnp.zeros((), jnp.int32)}
+
+
+def hybrid_prefill(params, cfg: ModelConfig, x, positions, max_len: int):
+    shared = params["shared"]
+    h0 = x
+    b = x.shape[0]
+
+    def group(h, gp):
+        def inner(hh, lp):
+            out, st = ssm.mamba_prefill(
+                lp["mamba"], cfg, L.rmsnorm(lp["ln"], hh, cfg.norm_eps)
+            )
+            return hh + out, st
+
+        h, states = T.layer_scan(cfg, inner, h, gp)
+        zin = L.dense(
+            shared["proj_in"], jnp.concatenate([h, h0], axis=-1), dtype=cfg.activation_dtype()
+        )
+        a, (k, v) = T.attn_apply(
+            shared["attn"],
+            cfg,
+            L.rmsnorm(shared["ln_attn"], zin, cfg.norm_eps),
+            positions=positions,
+            causal=True,
+            return_kv=True,
+        )
+        z = zin + a
+        f = T.ffn_apply(shared["ffn"], cfg, L.rmsnorm(shared["ln_ffn"], z, cfg.norm_eps))
+        h = h + (z + f - zin)
+        cache = T.fill_cache(cfg, T.init_cache(cfg, b, max_len), k, v)
+        return h, (states, cache)
+
+    h, (mamba_states, attn_caches) = T.layer_scan(cfg, group, x, params["mamba"])
+    caches = {
+        "mamba": mamba_states,
+        "attn": attn_caches,
+        "len": jnp.asarray(x.shape[1], jnp.int32),
+    }
+    return h, caches
+
+
+def hybrid_decode(params, cfg: ModelConfig, x, caches):
+    shared = params["shared"]
+    h0 = x
+    pos = caches["len"]
+
+    def group(h, scanned):
+        gp, mstates, acache = scanned
+        acache = dict(acache, len=pos)
+
+        def inner(hh, sc):
+            lp, st = sc
+            out, st = ssm.mamba_decode(
+                lp["mamba"], cfg, L.rmsnorm(lp["ln"], hh, cfg.norm_eps), st
+            )
+            return hh + out, st
+
+        h, mstates = T.layer_scan(cfg, inner, h, (gp, mstates))
+        zin = L.dense(
+            shared["proj_in"], jnp.concatenate([h, h0], axis=-1), dtype=cfg.activation_dtype()
+        )
+        a, acache = T.attn_decode(
+            shared["attn"], cfg, L.rmsnorm(shared["ln_attn"], zin, cfg.norm_eps), acache
+        )
+        z = zin + a
+        f = T.ffn_apply(shared["ffn"], cfg, L.rmsnorm(shared["ln_ffn"], z, cfg.norm_eps))
+        h = h + (z + f - zin)
+        return h, (mstates, acache)
+
+    h, (mamba_states, attn_caches) = T.layer_scan(
+        cfg, group, x, (params["mamba"], caches["mamba"], caches["attn"])
+    )
+    new = {"mamba": mamba_states, "attn": attn_caches, "len": pos + 1}
+    return h, new

@@ -1,0 +1,136 @@
+"""Top-k routed MoE FFN (GShard/Mixtral-style, capacity-based, static shapes).
+
+Dispatch uses a scatter into an (E, C, d) expert buffer and a gather back —
+fully static shapes so it lowers cleanly under pjit; with experts sharded on
+the 'model' axis GSPMD materializes the dispatch/combine as all-to-all-class
+collectives (the dominant collective term for the MoE archs, see
+EXPERIMENTS.md §Roofline).
+
+Aux losses: load-balance (Switch-style over full softmax probs × dispatch
+fractions) + router z-loss; returned as a scalar the caller folds into the
+training loss.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.context import constrain
+from repro.models import layers as L
+
+__all__ = ["moe_init", "moe_apply", "expert_capacity"]
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    cap = int(math.ceil(n_tokens * m.top_k / m.num_experts * m.capacity_factor))
+    return max(8, -(-cap // 8) * 8)  # pad to a multiple of 8
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, ff, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    kr, kg, ku, kd = L.split_keys(key, 4)
+    pd = cfg.parameter_dtype()
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff)
+    return {
+        "router": L.dense_init(kr, d, e, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(kg, (e, d, ff)) * s_in).astype(pd),
+        "w_up": (jax.random.normal(ku, (e, d, ff)) * s_in).astype(pd),
+        "w_down": (jax.random.normal(kd, (e, ff, d)) * s_out).astype(pd),
+    }
+
+
+def moe_apply(
+    p: dict, cfg: ModelConfig, x: jax.Array, *, dropless: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    dropless=True uses the sort + ``lax.ragged_dot`` grouped-GEMM path (no
+    capacity, no token dropping) — the serving configuration. Training uses
+    the capacity path (GShard-style) whose static buffer shapes shard
+    predictably under pjit.
+    """
+    if dropless:
+        return _moe_dropless(p, cfg, x)
+    m = cfg.moe
+    dt = cfg.activation_dtype()
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    cap = expert_capacity(t, cfg)
+
+    xf = x.reshape(t, d)
+    logits = L.dense(p["router"], xf.astype(jnp.float32))  # (T, E) f32 router
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    top_logits, sel = jax.lax.top_k(logits, k)  # (T, k)
+    weights = jax.nn.softmax(top_logits, axis=-1).astype(jnp.float32)
+
+    # --- flat assignment stream (token-major priority) ---------------------
+    e_flat = sel.reshape(-1)  # (T*k,)
+    w_flat = weights.reshape(-1)
+    oh = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)  # (T*k, E)
+    pos_all = jnp.cumsum(oh, axis=0) - 1
+    pos = jnp.take_along_axis(pos_all, e_flat[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = (pos < cap).astype(jnp.float32)
+    pos_c = jnp.minimum(pos, cap - 1)
+
+    # --- dispatch: scatter tokens into (E, C, d) buffers --------------------
+    x_rep = jnp.repeat(xf, k, axis=0).astype(dt)  # (T*k, d)
+    buf = jnp.zeros((e, cap, d), dt)
+    buf = buf.at[e_flat, pos_c].add(x_rep * keep[:, None].astype(dt))
+    buf = constrain(buf, "moe_buffer")
+
+    # --- expert SwiGLU -------------------------------------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+
+    # --- combine: gather back, weight, reduce over k -------------------------
+    y_flat = y_buf[e_flat, pos_c] * (w_flat * keep)[:, None].astype(dt)
+    y = y_flat.reshape(t, k, d).sum(axis=1).reshape(b, s, d)
+
+    # --- aux losses -----------------------------------------------------------
+    me = probs.mean(axis=0)                                   # (E,) mean router prob
+    ce = oh.astype(jnp.float32).mean(axis=0) * (1.0 / k) * e  # dispatch fraction
+    load_balance = e * jnp.sum(me * ce) / e                   # Switch aux (≈1 when uniform)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = m.aux_loss_coef * load_balance + m.router_z_coef * z
+    return y.astype(x.dtype), aux
+
+
+def _moe_dropless(p: dict, cfg: ModelConfig, x: jax.Array):
+    """Dropless grouped-GEMM MoE (vLLM/MegaBlocks-style) via lax.ragged_dot."""
+    m = cfg.moe
+    dt = cfg.activation_dtype()
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+
+    xf = x.reshape(t, d)
+    logits = L.dense(p["router"], xf.astype(jnp.float32))
+    top_logits, sel = jax.lax.top_k(logits, k)
+    weights = jax.nn.softmax(top_logits, axis=-1)
+
+    e_flat = sel.reshape(-1)
+    w_flat = weights.reshape(-1)
+    order = jnp.argsort(e_flat)  # stable in jnp
+    inv = jnp.argsort(order)
+    x_sorted = constrain(jnp.repeat(xf, k, axis=0)[order].astype(dt), "moe_tokens")
+    group_sizes = jnp.bincount(e_flat, length=e).astype(jnp.int32)
+
+    g = jax.lax.ragged_dot(x_sorted, p["w_gate"].astype(dt), group_sizes)
+    u = jax.lax.ragged_dot(x_sorted, p["w_up"].astype(dt), group_sizes)
+    h = jax.nn.silu(g) * u
+    y_sorted = jax.lax.ragged_dot(h, p["w_down"].astype(dt), group_sizes)
+
+    y_flat = y_sorted[inv] * w_flat[:, None].astype(dt)
+    y = y_flat.reshape(t, k, d).sum(axis=1).reshape(b, s, d)
+    return y.astype(x.dtype), jnp.zeros((), jnp.float32)

@@ -1,0 +1,266 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD form for train/prefill (quadratic intra-chunk + linear
+inter-chunk state passing), exact recurrent step for decode. Matches the
+sequential oracle ``repro.kernels.ref.ssd_ref`` (tested).
+
+The SSD chunk stream is itself a cyclic tile traversal; sawtooth chunk
+re-ordering does not apply to the forward (each chunk is visited once) but
+the backward's re-read of (x, B, C) chunks is a retraversal — exposed as a
+beyond-paper experiment, see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+__all__ = [
+    "ssd_chunked",
+    "mamba_init",
+    "mamba_apply",
+    "mamba_decode",
+    "mamba_init_state",
+    "mamba_prefill",
+    "d_inner",
+    "n_ssm_heads",
+]
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def n_ssm_heads(cfg: ModelConfig) -> int:
+    di = d_inner(cfg)
+    assert di % cfg.ssm.head_dim == 0, (di, cfg.ssm.head_dim)
+    return di // cfg.ssm.head_dim
+
+
+# --------------------------------------------------------------------------
+# chunked SSD scan
+# --------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  — post-softplus, >= 0
+    a: jax.Array,   # (H,)       — negative decay rates
+    b: jax.Array,   # (B, S, N)
+    c: jax.Array,   # (B, S, N)
+    *,
+    chunk: int = 128,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)). f32 internally."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 -> no update, no decay
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    af = a.astype(jnp.float32)
+
+    da = dtf * af[None, None, None, :]            # (b,nc,c,h), <= 0
+    cum = jnp.cumsum(da, axis=2)                  # inclusive within-chunk
+    cum_h = cum.transpose(0, 1, 3, 2)             # (b,nc,h,c)
+
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (c_i.b_j) x_j
+    diff = cum_h[..., :, None] - cum_h[..., None, :]          # (b,nc,h,c,c)
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tril, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bzin,bzjn->bzij", cf, bf)                # (b,nc,c,c)
+    w = cb[:, :, None] * decay * dtf.transpose(0, 1, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bzhij,bzjhp->bzihp", w, xf)
+
+    # chunk state contributions: S_c = sum_j exp(cum_last - cum_j) dt_j x_j b_j^T
+    cum_last = cum[:, :, -1:, :]                              # (b,nc,1,h)
+    decay_end = jnp.exp(cum_last - cum)                       # (b,nc,c,h)
+    s_c = jnp.einsum("bzch,bzcn,bzchp->bzhpn", dtf * decay_end, bf, xf)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (b,nc,h)
+
+    # inter-chunk: running state scan
+    s0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def body(carry, t):
+        s_ck, dk = t
+        s_in = carry
+        return dk[..., None, None] * s_in + s_ck, s_in
+
+    final, s_in_all = jax.lax.scan(
+        body,
+        s0,
+        (jnp.moveaxis(s_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in_all, 0, 1)                       # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bzcn,bzch,bzhpn->bzchp", cf, jnp.exp(cum), s_in)
+    y = (y_intra + y_inter).reshape(bsz, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 block
+# --------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg: ModelConfig) -> dict:
+    m = cfg.ssm
+    d = cfg.d_model
+    di = d_inner(cfg)
+    h = n_ssm_heads(cfg)
+    n = m.state_dim
+    conv_ch = di + 2 * n
+    k_in, k_conv, k_out, k_a, k_dt = L.split_keys(key, 5)
+    pd = cfg.parameter_dtype()
+    return {
+        "in_proj": L.dense_init(k_in, d, 2 * di + 2 * n + h, dtype=pd),
+        "conv_w": (jax.random.normal(k_conv, (m.conv_width, conv_ch)) * 0.2).astype(pd),
+        "conv_b": jnp.zeros((conv_ch,), pd),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h).astype(jnp.float32)
+        ),  # A in [-16, -1]
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": (jax.random.uniform(k_dt, (h,)) * 2.0 - 4.0).astype(jnp.float32),
+        "norm": L.rmsnorm_init(di, pd),
+        "out_proj": L.dense_init(k_out, di, d, dtype=pd),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d, width w.shape[0]. xbc (B, S, Ch)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    s = xbc.shape[1]
+    out = sum(
+        pad[:, u : u + s, :] * w[u][None, None, :].astype(xbc.dtype)
+        for u in range(width)
+    )
+    return out + bias[None, None, :].astype(xbc.dtype)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di = d_inner(cfg)
+    n = cfg.ssm.state_dim
+    h = n_ssm_heads(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt_raw = zxbcdt[..., 2 * di + 2 * n :]
+    assert dt_raw.shape[-1] == h
+    return z, xbc, dt_raw
+
+
+def _ssm_inputs(cfg: ModelConfig, p: dict, xbc_conv: jax.Array, dt_raw: jax.Array):
+    di = d_inner(cfg)
+    n = cfg.ssm.state_dim
+    h = n_ssm_heads(cfg)
+    xbc_act = jax.nn.silu(xbc_conv)
+    x_in = xbc_act[..., :di]
+    b_in = xbc_act[..., di : di + n]
+    c_in = xbc_act[..., di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])
+    shp = x_in.shape[:-1] + (h, cfg.ssm.head_dim)
+    return x_in.reshape(shp), b_in, c_in, dt, a
+
+
+def _finish(cfg: ModelConfig, p: dict, y_heads, x_heads, z):
+    di = d_inner(cfg)
+    y = y_heads + p["d_skip"][None, None, :, None] * x_heads.astype(jnp.float32)
+    y = y.reshape(y.shape[0], y.shape[1], di)
+    y = L.rmsnorm(p["norm"], (y * jax.nn.silu(z.astype(jnp.float32))).astype(z.dtype), cfg.norm_eps)
+    return L.dense(p["out_proj"], y, dtype=cfg.activation_dtype())
+
+
+def mamba_apply(
+    p: dict, cfg: ModelConfig, x: jax.Array, *, init_state=None
+) -> jax.Array:
+    """Full-sequence Mamba-2 block. x (B, S, d) -> (B, S, d)."""
+    dt_act = cfg.activation_dtype()
+    zxbcdt = L.dense(p["in_proj"], x, dtype=dt_act)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x_h, b_in, c_in, dt, a = _ssm_inputs(cfg, p, xbc, dt_raw)
+    y, _ = ops.ssd(
+        x_h, dt, a, b_in, c_in, chunk=cfg.ssm.chunk, init_state=init_state,
+        impl=cfg.ssd_impl,
+    )
+    return _finish(cfg, p, y.astype(jnp.float32), x_h, z)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> dict:
+    m = cfg.ssm
+    di = d_inner(cfg)
+    h = n_ssm_heads(cfg)
+    return {
+        "conv": jnp.zeros((batch, m.conv_width - 1, di + 2 * m.state_dim), cfg.activation_dtype()),
+        "ssd": jnp.zeros((batch, h, m.head_dim, m.state_dim), jnp.float32),
+    }
+
+
+def mamba_prefill(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also returns the decode state."""
+    dt_act = cfg.activation_dtype()
+    zxbcdt = L.dense(p["in_proj"], x, dtype=dt_act)
+    z, xbc_raw, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    x_h, b_in, c_in, dt, a = _ssm_inputs(cfg, p, xbc, dt_raw)
+    y, final = ops.ssd(
+        x_h, dt, a, b_in, c_in, chunk=cfg.ssm.chunk, impl=cfg.ssd_impl
+    )
+    out = _finish(cfg, p, y.astype(jnp.float32), x_h, z)
+    w = cfg.ssm.conv_width
+    conv_state = xbc_raw[:, -(w - 1) :, :]
+    pad = (w - 1) - conv_state.shape[1]
+    if pad > 0:
+        conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"conv": conv_state, "ssd": final}
+
+
+def mamba_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, state: dict
+) -> tuple[jax.Array, dict]:
+    """One-token step. x (B, 1, d); state from mamba_init_state/prefill."""
+    dt_act = cfg.activation_dtype()
+    zxbcdt = L.dense(p["in_proj"], x, dtype=dt_act)
+    z, xbc_t, dt_raw = _split_proj(cfg, zxbcdt)
+
+    hist = jnp.concatenate([state["conv"], xbc_t], axis=1)  # (B, w, Ch)
+    conv_out = (
+        jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    )[:, None, :].astype(dt_act)
+    new_conv = hist[:, 1:, :]
+
+    x_h, b_in, c_in, dt, a = _ssm_inputs(cfg, p, conv_out, dt_raw)
+    # exact recurrence (matches kernels.ref.ssd_ref)
+    dtf = dt[:, 0]  # (B, H)
+    decay = jnp.exp(dtf * a[None, :])[..., None, None]
+    upd = (dtf[..., None] * x_h[:, 0].astype(jnp.float32))[..., :, None] * b_in[
+        :, 0, None, None, :
+    ].astype(jnp.float32)
+    s_new = decay * state["ssd"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", s_new, c_in[:, 0].astype(jnp.float32))[:, None]
+    out = _finish(cfg, p, y, x_h, z)
+    return out, {"conv": new_conv, "ssd": s_new}

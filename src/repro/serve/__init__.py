@@ -1,0 +1,3 @@
+from repro.serve.engine import GenerationResult, Request, ServeEngine
+
+__all__ = ["GenerationResult", "Request", "ServeEngine"]

@@ -1,0 +1,114 @@
+"""Fault-tolerant training loop: checkpoint/resume, watchdog, injection.
+
+The loop is deliberately plain: a production job wraps exactly this shape —
+build step -> restore-or-init -> iterate(data) with watchdog ->
+checkpoint cadence -> on failure: resume from latest (same or smaller mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.data.pipeline import DataConfig, make_batch_iterator
+from repro.models.model import LM
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import FailureInjector, StepTimeout, Watchdog
+from repro.train.step import make_train_state, make_train_step, shard_state
+
+log = logging.getLogger(__name__)
+
+__all__ = ["TrainResult", "run_training"]
+
+
+@dataclasses.dataclass
+class TrainResult:
+    final_step: int
+    losses: list
+    resumed_from: Optional[int]
+    interrupted: bool = False
+
+
+def run_training(
+    lm: LM,
+    tcfg: TrainConfig,
+    pcfg: ParallelConfig,
+    mesh,
+    *,
+    steps: Optional[int] = None,
+    data_cfg: Optional[DataConfig] = None,
+    injector: Optional[FailureInjector] = None,
+    step_timeout_s: float = 0.0,
+    log_every: int = 10,
+    make_batch: Optional[Callable[[int], dict]] = None,
+) -> TrainResult:
+    steps = steps or tcfg.total_steps
+    ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+
+    with jax.set_mesh(mesh):
+        state = make_train_state(lm, tcfg, jax.random.PRNGKey(tcfg.seed))
+        resumed_from = None
+        if ckpt.latest_step() is not None:
+            state, resumed = ckpt.restore_latest(state)
+            resumed_from = resumed
+            log.info("resumed from step %d", resumed)
+        state = shard_state(state, pcfg, mesh)
+        start = resumed_from + 1 if resumed_from is not None else 0
+
+        if make_batch is None:
+            assert data_cfg is not None
+            src = make_batch_iterator(data_cfg, start_step=start)
+            batch_fn = lambda step: next(iter(src))
+        else:
+            batch_fn = make_batch
+
+        step_fn, compile_step = make_train_step(lm, tcfg, pcfg, mesh)
+        batch0 = batch_fn(start)
+        compiled = compile_step(state, batch0)
+
+        losses = []
+        interrupted = False
+        t0 = time.time()
+        i = start
+        while i < steps:
+            batch = batch_fn(i) if i != start else batch0
+            try:
+                if injector is not None:
+                    injector.maybe_fail(i)
+                if step_timeout_s > 0:
+                    with Watchdog(step_timeout_s):
+                        state, metrics = compiled(state, batch)
+                        loss = float(metrics["loss"])  # blocks inside watchdog
+                else:
+                    state, metrics = compiled(state, batch)
+                    loss = float(metrics["loss"])
+            except StepTimeout:
+                log.warning("step %d hit watchdog; re-running batch", i)
+                continue  # straggler mitigation: redo the step
+            except RuntimeError as e:
+                log.error("step %d failed: %s — checkpoint + stop", i, e)
+                interrupted = True
+                break
+            losses.append(loss)
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"non-finite loss at step {i}: {loss}")
+            if log_every and i % log_every == 0:
+                dt = time.time() - t0
+                log.info("step %d loss %.4f (%.2fs elapsed)", i, loss, dt)
+            if tcfg.checkpoint_every and (i + 1) % tcfg.checkpoint_every == 0:
+                ckpt.save(state, i)
+            i += 1
+
+        ckpt.save(state, max(i - 1, 0), blocking=True)
+        return TrainResult(
+            final_step=i - 1,
+            losses=losses,
+            resumed_from=resumed_from,
+            interrupted=interrupted,
+        )

@@ -1,0 +1,133 @@
+"""Optimizers (pure JAX, pytree states): AdamW and memory-factored AdamW.
+
+``adamw_factored`` keeps the first moment in bf16 and replaces the second
+moment of rank>=2 leaves with Adafactor-style row/col statistics — this is
+what lets llama3-405b-class configs fit the assigned 256x16GB pod (see
+EXPERIMENTS.md §Dry-run memory table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+__all__ = ["OptState", "make_optimizer", "cosine_schedule", "global_norm"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def cosine_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+_NO_DECAY = {"b", "bias", "scale", "a_log", "dt_bias", "d_skip", "conv_b"}
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay only on weight matrices (skip norms, biases, scalars)."""
+    leaf_name = str(getattr(path[-1], "key", path[-1])) if path else ""
+    return leaf_name not in _NO_DECAY
+
+
+def _factored_shape(shape):
+    return len(shape) >= 2
+
+
+def make_optimizer(cfg: TrainConfig):
+    """Returns (init_fn, update_fn).
+
+    update(grads, state, params) -> (new_params, new_state, stats)
+    """
+    factored = cfg.optimizer == "adamw_factored"
+    lr_fn = cosine_schedule(cfg)
+
+    def init(params) -> OptState:
+        def m_leaf(x):
+            return jnp.zeros_like(x, dtype=jnp.bfloat16 if factored else jnp.float32)
+
+        def v_leaf(x):
+            if factored and _factored_shape(x.shape):
+                return {
+                    "row": jnp.zeros(x.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32),
+                }
+            return jnp.zeros_like(x, dtype=jnp.float32)
+
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(m_leaf, params),
+            v=jax.tree.map(v_leaf, params),
+        )
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr = lr_fn(step)
+        gnorm = global_norm(grads)
+        clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        b1, b2, eps = cfg.b1, cfg.b2, 1e-8
+        bc1 = 1.0 - b1**step.astype(jnp.float32)
+        bc2 = 1.0 - b2**step.astype(jnp.float32)
+
+        def upd(path, g, m, v, p):
+            g = g.astype(jnp.float32) * clip
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            if isinstance(v, dict):  # factored second moment
+                g2 = g * g + 1e-30
+                row = b2 * v["row"] + (1 - b2) * jnp.mean(g2, axis=-1)
+                col = b2 * v["col"] + (1 - b2) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction: v_ij ~ row_i * col_j / mean(row)
+                denom = jnp.clip(jnp.mean(row, axis=-1, keepdims=True), 1e-30, None)
+                v_hat = (row[..., :, None] * col[..., None, :]) / denom[..., None]
+                v_new = {"row": row, "col": col}
+                nu = v_hat / bc2
+            else:
+                v_new = b2 * v + (1 - b2) * g * g
+                nu = v_new / bc2
+            mu = m_new / bc1
+            delta = mu / (jnp.sqrt(nu) + eps)
+            if _decay_mask(path):
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return p_new, m_new.astype(m.dtype), v_new
+
+        flat = jax.tree_util.tree_map_with_path(
+            lambda path, g, m, v, p: upd(path, g, m, v, p),
+            grads,
+            state.m,
+            state.v,
+            params,
+            is_leaf=lambda x: isinstance(x, dict) and set(x) == {"row", "col"},
+        )
+        is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=is3)
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=is3)
+        new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=is3)
+        stats = {"lr": lr, "grad_norm": gnorm, "clip": clip}
+        return new_params, OptState(step=step, m=new_m, v=new_v), stats
+
+    return init, update

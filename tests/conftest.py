@@ -1,0 +1,21 @@
+import os
+import sys
+
+# Make `repro` importable without installation; tests see 1 CPU device
+# (the 512-device flag belongs to the dry-run ONLY — assignment rule).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def local_mesh():
+    from repro.launch.mesh import make_local_mesh
+
+    return make_local_mesh(1, 1)

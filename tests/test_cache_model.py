@@ -1,0 +1,92 @@
+"""The paper's analytic L2 model (§3.2–3.3) — validated against the paper's
+own published counter values and against the exact tiled count."""
+
+import pytest
+
+from repro.core.cache_model import (
+    GB10,
+    AttentionWorkload,
+    attention_flops,
+    cold_miss_sectors,
+    divergence_seq_len,
+    gb10_throughput_model,
+    kv_bytes,
+    l2_sector_accesses,
+    l2_sector_accesses_simple,
+)
+
+# Paper Table 1 (SM=48, T=80, D=64, fp16): measured L2 total sectors.
+PAPER_TABLE1 = {32 * 1024: 107_729_467, 128 * 1024: 1_723_556_561}
+
+
+@pytest.mark.parametrize("seq,measured", sorted(PAPER_TABLE1.items()))
+def test_model_matches_paper_table1(seq, measured):
+    w = AttentionWorkload(seq_len=seq, tile=80)
+    predicted = l2_sector_accesses(w, GB10)
+    mape = abs(predicted - measured) / measured
+    # Paper Table 3 reports <0.46% MAPE for the non-causal model.
+    assert mape < 0.006, (seq, predicted, measured, mape)
+
+
+def test_simple_form_matches_paper_closed_form():
+    # M ~= 8S(1 + S/T) with C=32, E=2, D=64 (paper §3.2)
+    for s in (8192, 32768, 131072):
+        w = AttentionWorkload(seq_len=s, tile=80)
+        assert l2_sector_accesses_simple(w, GB10) == pytest.approx(8 * s * (1 + s / 80))
+
+
+def test_causal_roughly_half_noncausal():
+    w_nc = AttentionWorkload(seq_len=65536, tile=64, causal=False)
+    w_c = AttentionWorkload(seq_len=65536, tile=64, causal=True)
+    ratio = l2_sector_accesses(w_c, GB10) / l2_sector_accesses(w_nc, GB10)
+    assert 0.45 < ratio < 0.55
+
+
+def test_cold_miss_is_16s():
+    w = AttentionWorkload(seq_len=32768, tile=80)
+    assert cold_miss_sectors(w, GB10) == 16 * 32768
+
+
+def test_divergence_near_80k():
+    # Paper: divergence observed at ~80K (KV=20MiB vs 24MiB L2). The pure
+    # KV-capacity bound gives 96K; Q/O residency accounts for the gap, so the
+    # bound must sit between the observed point and a loose 1.5x.
+    w = AttentionWorkload(seq_len=1, tile=80)
+    s = divergence_seq_len(GB10, w)
+    assert 80_000 <= s <= 120_000
+
+
+def test_batch_heads_scale_linearly():
+    w1 = AttentionWorkload(seq_len=16384, tile=64)
+    w8 = AttentionWorkload(seq_len=16384, tile=64, batch=4, heads=2)
+    assert l2_sector_accesses(w8, GB10) == 8 * l2_sector_accesses(w1, GB10)
+
+
+def test_throughput_model_monotone_in_misses():
+    from repro.core.cache_model import calibrate_miss_service
+
+    w = AttentionWorkload(seq_len=131072, tile=64, batch=8)
+    svc = calibrate_miss_service(w, GB10, observed_flops=61e12, miss_sectors=370e6)
+    hi = gb10_throughput_model(w, GB10, miss_sectors=370e6, miss_service_s=svc)
+    lo = gb10_throughput_model(w, GB10, miss_sectors=120e6, miss_service_s=svc)
+    assert lo > hi  # fewer misses -> more throughput
+    assert hi == pytest.approx(61e12, rel=1e-6)  # calibration reproduces baseline
+    assert attention_flops(w) > 0
+    assert kv_bytes(w) == 8 * 2 * 131072 * 64 * 2
+
+
+def test_throughput_model_reproduces_cutile_regime():
+    """Calibrate on the paper's cyclic CuTile numbers, predict sawtooth."""
+    from repro.core.cache_model import calibrate_miss_service
+
+    w = AttentionWorkload(seq_len=131072, tile=64, head_dim=64, batch=8)
+    # paper §4.3.1: 370M -> 120M miss sectors, 61 -> 69 TFLOPS (non-causal).
+    # kernel_peak=74 TFLOPS is the CuTile kernel's calibrated compute ceiling
+    # (EXPERIMENTS.md §Paper-validation); svc from the cyclic baseline only.
+    svc = calibrate_miss_service(
+        w, GB10, observed_flops=61e12, miss_sectors=370e6, kernel_peak=74e12
+    )
+    predicted = gb10_throughput_model(
+        w, GB10, miss_sectors=120e6, miss_service_s=svc, kernel_peak=74e12
+    )
+    assert 66e12 < predicted < 72e12, predicted / 1e12  # paper: ~69 TFLOPS

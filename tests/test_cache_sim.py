@@ -1,0 +1,84 @@
+"""LRU simulator vs the paper's empirical findings (§3.3, §3.4, §4.2)."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.cache_model import GB10, AttentionWorkload, cold_miss_sectors, l2_sector_accesses
+from repro.core.cache_sim import LRUCache, SimResult, simulate_attention, simulate_trace
+
+
+def scaled(cache_mb):
+    return dataclasses.replace(GB10, cache_bytes=int(cache_mb * 2**20))
+
+
+def test_lru_basics():
+    r = SimResult()
+    c = LRUCache(2)
+    assert not c.access(("a",), 1, r)
+    assert not c.access(("b",), 1, r)
+    assert c.access(("a",), 1, r)          # hit
+    assert not c.access(("c",), 1, r)      # evicts b (LRU)
+    assert not c.access(("b",), 1, r)      # miss again
+    assert r.accesses == 5 and r.misses == 4 and r.cold_misses == 3
+
+
+def test_trace_access_count_matches_model():
+    w = AttentionWorkload(seq_len=4096, tile=64)
+    r = simulate_attention(w, GB10, "cyclic", n_workers=8)
+    assert r.accesses == pytest.approx(l2_sector_accesses(w, GB10), rel=1e-6)
+
+
+def test_fits_in_cache_only_cold_misses():
+    w = AttentionWorkload(seq_len=8192, tile=64)  # KV 2MB << 24MB
+    for order in ("cyclic", "sawtooth"):
+        r = simulate_attention(w, GB10, order, n_workers=48)
+        assert r.non_compulsory_misses == 0
+        assert r.cold_misses == pytest.approx(cold_miss_sectors(w, GB10), rel=1e-6)
+
+
+def test_hit_rate_law_1_minus_1_over_n():
+    """Paper Fig 6: in the overflow regime hit rate ~ 1 - 1/N."""
+    hw = scaled(2)
+    w = AttentionWorkload(seq_len=16384, tile=64)  # KV 4MB vs 2MB
+    for n in (1, 2, 4, 8, 16):
+        r = simulate_attention(w, hw, "cyclic", n_workers=n)
+        expect = 1 - 1 / n
+        assert abs(r.hit_rate - expect) < 0.05, (n, r.hit_rate)
+
+
+def test_divergence_when_kv_exceeds_cache():
+    hw = scaled(2)
+    small = AttentionWorkload(seq_len=4096, tile=64)   # KV 1MB < 2MB
+    big = AttentionWorkload(seq_len=16384, tile=64)    # KV 4MB > 2MB
+    assert simulate_attention(small, hw, "cyclic").non_compulsory_misses == 0
+    assert simulate_attention(big, hw, "cyclic").non_compulsory_misses > 0
+
+
+def test_sawtooth_halves_noncompulsory_misses():
+    """Paper §4.2: ~50% reduction at the paper's overflow ratio (~1.33x)."""
+    hw = scaled(3)
+    w = AttentionWorkload(seq_len=16384, tile=64)  # KV 4MB vs 3MB cache
+    cyc = simulate_attention(w, hw, "cyclic", n_workers=48)
+    saw = simulate_attention(w, hw, "sawtooth", n_workers=48)
+    reduction = 1 - saw.non_compulsory_misses / cyc.non_compulsory_misses
+    assert reduction > 0.45, reduction
+
+
+def test_sawtooth_never_worse_lru():
+    """Property: under LRU, sawtooth non-compulsory misses <= cyclic for this
+    wavefront workload across overflow ratios."""
+    for cache_mb in (0.5, 1, 2, 3, 8):
+        hw = scaled(cache_mb)
+        w = AttentionWorkload(seq_len=8192, tile=64)
+        cyc = simulate_attention(w, hw, "cyclic", n_workers=16)
+        saw = simulate_attention(w, hw, "sawtooth", n_workers=16)
+        assert saw.non_compulsory_misses <= cyc.non_compulsory_misses + 1e-9
+
+
+def test_causal_sawtooth_still_helps():
+    hw = scaled(2)
+    w = AttentionWorkload(seq_len=16384, tile=64, causal=True)
+    cyc = simulate_attention(w, hw, "cyclic", n_workers=48)
+    saw = simulate_attention(w, hw, "sawtooth", n_workers=48)
+    assert saw.non_compulsory_misses < cyc.non_compulsory_misses

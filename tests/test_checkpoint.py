@@ -1,0 +1,78 @@
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)), "b": jnp.zeros((16,), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path), 7)
+    restored, step = restore_pytree(t, str(tmp_path))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_latest_step_ignores_partial(tmp_path):
+    save_pytree(_tree(), str(tmp_path), 3)
+    # simulate a torn write: directory without manifest
+    os.makedirs(tmp_path / "step_00000009")
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_manager_async_and_retention(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        m.save(t, s)
+    m.wait()
+    steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_manager_restore_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree()
+    m.save(t, 5, blocking=True)
+    t2 = jax.tree.map(lambda x: x * 0, t)
+    restored, step = m.restore_latest(t2)
+    assert step == 5
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(t["params"]["w"])
+    )
+
+
+def test_restore_with_shardings(tmp_path):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh(1, 1)
+    t = _tree()
+    save_pytree(t, str(tmp_path), 0)
+    sh = jax.tree.map(lambda x: NamedSharding(mesh, P()), t)
+    restored, _ = restore_pytree(t, str(tmp_path), shardings=sh)
+    assert restored["params"]["w"].sharding == NamedSharding(mesh, P())
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_pytree(_tree(), str(tmp_path / "nope"))

@@ -1,0 +1,68 @@
+"""int8 KV cache: quantization quality, decode consistency, sharding rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ParallelConfig, all_configs, get_config
+from repro.dist import sharding as shd
+from repro.models import build_model
+from repro.models.transformer import _dequantize_kv, _quantize_kv, fill_cache, init_cache
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 64)) * 3.0
+    q, scale = _quantize_kv(x)
+    back = _dequantize_kv(q, scale, jnp.float32)
+    # symmetric per-vector int8: |err| <= scale/2 elementwise
+    bound = np.asarray(scale)[..., None] * 0.5 + 1e-6
+    assert (np.abs(np.asarray(back - x)) <= bound).all()
+
+
+def test_init_and_fill_int8_cache():
+    cfg = get_config("deepseek-7b").reduced().with_(kv_cache_dtype="int8")
+    cache = init_cache(cfg, batch=2, max_len=32)
+    assert cache["k"].dtype == jnp.int8
+    assert cache["k_scale"].shape == (2, 32, cfg.n_kv_heads)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.n_kv_heads, cfg.hd))
+    cache = fill_cache(cfg, cache, k, k)
+    back = _dequantize_kv(cache["k"][:, :16], cache["k_scale"][:, :16], jnp.float32)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(k), atol=0.05)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "mixtral-8x7b"])
+def test_int8_decode_close_to_bf16(arch):
+    cfg = all_configs()[arch].reduced()
+    lm16 = build_model(cfg)
+    lm8 = build_model(cfg.with_(kv_cache_dtype="int8"))
+    params = lm16.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab)
+    lg16, c16 = jax.jit(lambda p, b: lm16.prefill(p, b, 48))(params, {"tokens": toks})
+    lg8, c8 = jax.jit(lambda p, b: lm8.prefill(p, b, 48))(params, {"tokens": toks})
+    nxt = jnp.argmax(lg16[:, -1], -1)[:, None]
+    d16, _ = jax.jit(lm16.decode_step)(params, nxt, c16)
+    d8, _ = jax.jit(lm8.decode_step)(params, nxt, c8)
+    rel = float(jnp.abs(d8 - d16).max() / (jnp.abs(d16).max() + 1e-9))
+    assert rel < 0.1, rel
+    # memory halves (8-bit payload + small scales)
+    b16 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c16))
+    b8 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c8))
+    assert b8 < 0.75 * b16
+
+
+def test_cache_seq_shard_fallback_for_gqa():
+    """hkv=8 doesn't divide model=16 -> the cache shards its seq dim."""
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    pcfg = ParallelConfig(fsdp_axes=("data",), data_axes=("data",))
+    caches = {
+        "k": jax.ShapeDtypeStruct((126, 128, 32768, 8, 128), jnp.bfloat16),
+        "k_scale": jax.ShapeDtypeStruct((126, 128, 32768, 8), jnp.float32),
+    }
+    sh = shd.cache_shardings(caches, pcfg, mesh)
+    assert sh["k"].spec == jax.sharding.PartitionSpec(None, "data", "model", None, None)
+    assert sh["k_scale"].spec == jax.sharding.PartitionSpec(None, "data", "model", None)
+    # divisible heads keep head sharding
+    caches2 = {"k": jax.ShapeDtypeStruct((30, 128, 32768, 32, 128), jnp.bfloat16)}
+    sh2 = shd.cache_shardings(caches2, pcfg, mesh)
+    assert sh2["k"].spec == jax.sharding.PartitionSpec(None, "data", None, "model", None)

@@ -1,0 +1,73 @@
+"""MoE: routing invariants, capacity behavior, dropless == capacity@no-drop."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import moe
+
+
+def _setup(cap_factor=1.25, seed=0):
+    cfg = get_config("olmoe-1b-7b").reduced()
+    cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=cap_factor))
+    p = moe.moe_init(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 16, cfg.d_model))
+    return cfg, p, x
+
+
+def test_output_shape_and_finite():
+    cfg, p, x = _setup()
+    y, aux = moe.moe_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) > 0.0
+
+
+def test_dropless_matches_high_capacity():
+    """With capacity high enough that nothing drops, the two paths agree."""
+    cfg, p, x = _setup(cap_factor=100.0)
+    y_cap, _ = moe.moe_apply(p, cfg, x, dropless=False)
+    y_free, _ = moe.moe_apply(p, cfg, x, dropless=True)
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_free), atol=2e-4, rtol=2e-4)
+
+
+def test_low_capacity_drops_but_stays_finite():
+    cfg, p, x = _setup(cap_factor=0.25)
+    y, aux = moe.moe_apply(p, cfg, x)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_capacity_respected():
+    cfg, p, x = _setup()
+    t = x.shape[0] * x.shape[1]
+    cap = moe.expert_capacity(t, cfg)
+    assert cap >= t * cfg.moe.top_k // cfg.moe.num_experts
+    assert cap % 8 == 0
+
+
+def test_token_permutation_equivariance_dropless():
+    """Dropless MoE is a per-token map: permuting tokens permutes outputs."""
+    cfg, p, x = _setup()
+    xf = x.reshape(1, -1, x.shape[-1])
+    perm = jax.random.permutation(jax.random.PRNGKey(9), xf.shape[1])
+    y1, _ = moe.moe_apply(p, cfg, xf, dropless=True)
+    y2, _ = moe.moe_apply(p, cfg, xf[:, perm], dropless=True)
+    np.testing.assert_allclose(
+        np.asarray(y1[:, perm]), np.asarray(y2), atol=2e-4, rtol=2e-4
+    )
+
+
+def test_grad_flows_through_router_and_experts():
+    cfg, p, x = _setup()
+
+    def loss(p):
+        y, aux = moe.moe_apply(p, cfg, x)
+        return (y**2).sum() + aux
+
+    g = jax.grad(loss)(p)
+    for name in ("router", "w_gate", "w_up", "w_down"):
+        leaf = g[name]["w"] if isinstance(g[name], dict) else g[name]
+        assert float(jnp.abs(leaf).sum()) > 0.0, name

@@ -1,0 +1,69 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.train.optimizer import cosine_schedule, global_norm, make_optimizer
+
+
+def _quad_problem(factored):
+    target = jnp.array([[1.0, -2.0], [3.0, 0.5]])
+    params = {"w": jnp.zeros((2, 2)), "ln_f": {"scale": jnp.ones((4,))}}
+    cfg = TrainConfig(
+        lr=0.1,
+        warmup_steps=0,
+        total_steps=200,
+        weight_decay=0.0,
+        optimizer="adamw_factored" if factored else "adamw",
+    )
+    init, update = make_optimizer(cfg)
+
+    def loss(p):
+        return ((p["w"] - target) ** 2).sum() + (p["ln_f"]["scale"] ** 2).sum() * 0.0
+
+    opt = init(params)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt, stats = update(g, opt, params)
+    return params, target
+
+
+@pytest.mark.parametrize("factored", [False, True])
+def test_converges_to_target(factored):
+    params, target = _quad_problem(factored)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=0.05)
+
+
+def test_factored_state_is_smaller():
+    params = {"w": jnp.zeros((128, 256))}
+    cfg_full = TrainConfig(optimizer="adamw")
+    cfg_fact = TrainConfig(optimizer="adamw_factored")
+    full = make_optimizer(cfg_full)[0](params)
+    fact = make_optimizer(cfg_fact)[0](params)
+    full_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(full))
+    fact_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(fact))
+    assert fact_bytes < 0.5 * full_bytes  # bf16 m + rank-1 v
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros((4,))}
+    cfg = TrainConfig(lr=1.0, warmup_steps=0, grad_clip=1.0, weight_decay=0.0)
+    init, update = make_optimizer(cfg)
+    opt = init(params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, stats = update(huge, opt, params)
+    assert float(stats["clip"]) < 1e-5
+
+
+def test_schedule_warmup_and_decay():
+    cfg = TrainConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lr = cosine_schedule(cfg)
+    assert float(lr(0)) < float(lr(10))
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr(100)) < float(lr(50))
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    assert float(global_norm(t)) == pytest.approx(np.sqrt(3 + 16))

@@ -1,0 +1,109 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attention import flash_attention, mha_reference
+from repro.core.cache_model import GB10, AttentionWorkload, l2_sector_accesses
+from repro.core.cache_sim import simulate_attention, simulate_trace
+from repro.core.schedule import KVSchedule, Order, kv_index_host
+from repro.dist.compression import dequantize_int8, quantize_int8
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+@SETTINGS
+@given(
+    n_q=st.integers(1, 12),
+    n_kv=st.integers(1, 12),
+    order=st.sampled_from(list(Order)),
+)
+def test_schedule_always_a_permutation(n_q, n_kv, order):
+    s = KVSchedule(order, n_q=n_q, n_kv=n_kv)
+    for i in range(n_q):
+        assert sorted(s.kv_order(i)) == list(range(n_kv))
+
+
+@SETTINGS
+@given(
+    seq=st.integers(1, 64).map(lambda x: x * 256),
+    tile=st.sampled_from([64, 80, 128]),
+    causal=st.booleans(),
+)
+def test_sector_model_positive_and_monotone(seq, tile, causal):
+    w1 = AttentionWorkload(seq_len=seq, tile=tile, causal=causal)
+    w2 = AttentionWorkload(seq_len=seq * 2, tile=tile, causal=causal)
+    a1, a2 = l2_sector_accesses(w1, GB10), l2_sector_accesses(w2, GB10)
+    assert 0 < a1 < a2
+
+
+@SETTINGS
+@given(
+    seed=st.integers(0, 2**16),
+    sq=st.integers(2, 6).map(lambda x: x * 16),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    causal=st.booleans(),
+)
+def test_attention_order_invariance(seed, sq, hkv, g, causal):
+    """Online softmax is KV-traversal-order invariant (the property that
+    makes the paper's reordering a pure performance change)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (1, sq, hkv * g, 32))
+    k = jax.random.normal(k2, (1, sq, hkv, 32))
+    v = jax.random.normal(k3, (1, sq, hkv, 32))
+    a = flash_attention(q, k, v, order="cyclic", causal=causal, q_block=16, kv_block=16)
+    b = flash_attention(q, k, v, order="sawtooth", causal=causal, q_block=16, kv_block=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5)
+    ref = mha_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+@SETTINGS
+@given(
+    seed=st.integers(0, 2**16),
+    shape=st.sampled_from([(64,), (33,), (8, 129), (3, 5, 7)]),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_int8_quantization_error_bound(seed, shape, scale):
+    x = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed), shape) * scale, np.float32
+    )
+    q, s = quantize_int8(jnp.asarray(x))
+    back = np.asarray(dequantize_int8(q, s, x.shape, jnp.float32))
+    # blockwise symmetric int8: error <= scale/2 per element, scale = max/127
+    bound = np.abs(x).max() / 127.0 * 0.5 + 1e-7
+    assert np.abs(back - x).max() <= bound * 1.001
+
+
+@SETTINGS
+@given(
+    cache_tiles=st.integers(2, 40),
+    n_tiles=st.integers(2, 24),
+    workers=st.integers(1, 8),
+)
+def test_lru_inclusion_bigger_cache_never_more_misses(cache_tiles, n_tiles, workers):
+    """LRU stack property: growing the cache can't increase misses."""
+    w = AttentionWorkload(seq_len=n_tiles * 64, tile=64)
+    hw_small = dataclasses.replace(GB10, cache_bytes=cache_tiles * 64 * 64 * 2)
+    hw_big = dataclasses.replace(GB10, cache_bytes=2 * cache_tiles * 64 * 64 * 2)
+    for order in ("cyclic", "sawtooth"):
+        small = simulate_attention(w, hw_small, order, n_workers=workers)
+        big = simulate_attention(w, hw_big, order, n_workers=workers)
+        assert big.misses <= small.misses + 1e-9
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**10), n=st.integers(1, 6))
+def test_sim_trace_conservation(seed, n):
+    """Accesses == hits + misses; cold misses <= distinct keys' sectors."""
+    rng = np.random.default_rng(seed)
+    trace = [((int(rng.integers(0, 10)),), 4.0) for _ in range(50 * n)]
+    r = simulate_trace(trace, capacity_sectors=16)
+    assert r.accesses == r.hits + r.misses
+    distinct = len({k for k, _ in trace})
+    assert r.cold_misses == distinct * 4.0

@@ -1,0 +1,67 @@
+import numpy as np
+import pytest
+
+from repro.core.schedule import KVSchedule, Order, kv_index, kv_index_host, num_kv_tiles_for
+
+
+def test_cyclic_order():
+    s = KVSchedule(Order.CYCLIC, n_q=3, n_kv=4)
+    for i in range(3):
+        assert s.kv_order(i) == [0, 1, 2, 3]
+
+
+def test_sawtooth_alternates():
+    s = KVSchedule(Order.SAWTOOTH, n_q=4, n_kv=5)
+    assert s.kv_order(0) == [0, 1, 2, 3, 4]
+    assert s.kv_order(1) == [4, 3, 2, 1, 0]
+    assert s.kv_order(2) == [0, 1, 2, 3, 4]
+
+
+def test_sawtooth_boundary_block_reuse():
+    """The defining property: last block of pass i == first of pass i+1."""
+    s = KVSchedule(Order.SAWTOOTH, n_q=6, n_kv=7)
+    for i in range(5):
+        assert s.kv_order(i)[-1] == s.kv_order(i + 1)[0]
+
+
+def test_each_pass_is_a_permutation():
+    for order in Order:
+        s = KVSchedule(order, n_q=5, n_kv=9)
+        for i in range(5):
+            assert sorted(s.kv_order(i)) == list(range(9))
+
+
+def test_causal_trimming():
+    assert num_kv_tiles_for(0, 8, causal=True, q_block=64, kv_block=64) == 1
+    assert num_kv_tiles_for(3, 8, causal=True, q_block=64, kv_block=64) == 4
+    assert num_kv_tiles_for(7, 8, causal=False, q_block=64, kv_block=64) == 8
+    # q blocks longer than kv blocks
+    assert num_kv_tiles_for(1, 16, causal=True, q_block=128, kv_block=64) == 4
+
+
+def test_traced_matches_host():
+    import jax.numpy as jnp
+
+    for order in Order:
+        for i in range(4):
+            for j in range(6):
+                host = kv_index_host(order, i, j, 6)
+                traced = int(kv_index(order, jnp.int32(i), jnp.int32(j), 6))
+                assert host == traced
+
+
+def test_wavefront_trace_covers_everything():
+    s = KVSchedule(Order.SAWTOOTH, n_q=4, n_kv=3, causal=False)
+    trace = list(s.wavefront_trace(n_workers=2))
+    ks = [t for t in trace if t[1] == "K"]
+    assert len(ks) == 4 * 3
+    qs = [t for t in trace if t[1] == "Q"]
+    assert sorted(t[2] for t in qs) == [0, 1, 2, 3]
+    os_ = [t for t in trace if t[1] == "O"]
+    assert len(os_) == 4
+
+
+def test_worker_assignment_round_robin():
+    s = KVSchedule(Order.CYCLIC, n_q=10, n_kv=2)
+    a = s.worker_assignments(3)
+    assert a[0] == [0, 3, 6, 9] and a[1] == [1, 4, 7] and a[2] == [2, 5, 8]

@@ -1,0 +1,48 @@
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import Request, ServeEngine
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "mixtral-8x7b", "mamba2-130m"])
+def test_engine_batches_requests(arch):
+    cfg = get_config(arch).reduced()
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(lm, params, batch_size=4, max_len=96)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(
+            tokens=rng.integers(2, cfg.vocab, size=4 + i).astype(np.int32),
+            max_new_tokens=5,
+            rid=i,
+        )
+        for i in range(7)  # spans two batches incl. ragged last one
+    ]
+    res = eng.generate(reqs)
+    assert [r.rid for r in res] == list(range(7))
+    assert all(1 <= r.steps <= 5 for r in res)
+
+
+def test_greedy_is_deterministic():
+    cfg = get_config("deepseek-7b").reduced()
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(lm, params, batch_size=2, max_len=64)
+    prompt = np.arange(2, 10, dtype=np.int32)
+    a = eng.generate([Request(tokens=prompt, max_new_tokens=6)])[0]
+    b = eng.generate([Request(tokens=prompt, max_new_tokens=6)])[0]
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_temperature_sampling_runs():
+    cfg = get_config("deepseek-7b").reduced()
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(lm, params, batch_size=2, max_len=64, seed=1)
+    prompt = np.arange(2, 10, dtype=np.int32)
+    out = eng.generate([Request(tokens=prompt, max_new_tokens=6, temperature=1.0)])[0]
+    assert out.steps >= 1

@@ -1,0 +1,94 @@
+"""Sharding rules: divisibility tightening, param spec coverage, HLO parse."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.analysis.hlo import collective_bytes, parse_shape_bytes
+from repro.configs import ParallelConfig, get_config
+from repro.dist import sharding as shd
+from repro.models import build_model
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """Abstract mesh for spec computation (no real devices needed)."""
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+def test_tighten_drops_nondividing_axes():
+    mesh = fake_mesh()
+    assert shd.tighten((128, 60), ("data", "model"), mesh) == P("data", None)
+    assert shd.tighten((256, 256), ("data", "model"), mesh) == P("data", "model")
+    assert shd.tighten((3, 5), ("data", "model"), mesh) == P(None, None)
+
+
+def test_tighten_multi_axis_prefix():
+    mesh = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    # 32 divides by pod*data=32
+    assert shd.tighten((32,), (("pod", "data"),), mesh) == P(("pod", "data"))
+    # 16 divides by pod=2 but not pod*data=32 -> keep prefix ('pod',)
+    assert shd.tighten((16,), (("pod", "data"),), mesh) == P("pod")
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "olmoe-1b-7b", "zamba2-2_7b"])
+def test_param_specs_cover_all_leaves(arch):
+    cfg = get_config(arch).reduced()
+    lm = build_model(cfg)
+    params = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    mesh = fake_mesh()
+    pcfg = ParallelConfig(fsdp_axes=("data",), data_axes=("data",))
+    specs = shd.param_specs(params, pcfg, mesh)
+    n_sharded = 0
+    for (path, spec), (_, leaf) in zip(
+        jax.tree_util.tree_flatten_with_path(specs)[0],
+        jax.tree_util.tree_flatten_with_path(params)[0],
+    ):
+        assert len(spec) == len(leaf.shape), (path, spec, leaf.shape)
+        if any(s is not None for s in spec):
+            n_sharded += 1
+    assert n_sharded > 0
+
+
+def test_full_config_shards_model_axis():
+    """On the production mesh the big matrices must actually split."""
+    cfg = get_config("deepseek-7b")
+    lm = build_model(cfg)
+    params = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    mesh = fake_mesh()
+    specs = shd.param_specs(params, ParallelConfig(fsdp_axes=("data",)), mesh)
+    wq = specs["layers"]["attn"]["wq"]["w"]
+    assert wq == P(None, "data", "model")  # (L, d, H*hd)
+    emb = specs["embed"]["table"]
+    assert emb[0] == "model"
+
+
+def test_batch_spec_fallbacks():
+    mesh = fake_mesh()
+    pcfg = ParallelConfig(fsdp_axes=("data",), data_axes=("data",))
+    assert shd.batch_spec(256, pcfg, mesh)[0] == "data"
+    assert shd.batch_spec(1, pcfg, mesh)[0] is None  # can't shard batch=1
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("f32[256,1024]") == 256 * 1024 * 4
+    assert parse_shape_bytes("bf16[8]{0}") == 16
+    assert parse_shape_bytes("(f32[4], s32[2])") == 24
+    assert parse_shape_bytes("pred[]") == 1
+
+
+def test_collective_bytes_parsing():
+    txt = """
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), replica_groups={}
+  %ag.1 = bf16[64,128]{1,0} all-gather(bf16[32,128]{1,0} %y), dimensions={0}
+  %rs = f32[16]{0} reduce-scatter(f32[64]{0} %z), dimensions={0}
+  %cp-start = (f32[8]{0}, f32[8]{0}) collective-permute-start(f32[8]{0} %w)
+  %cp-done = f32[8]{0} collective-permute-done(%cp-start)
+"""
+    cb = collective_bytes(txt)
+    assert cb["all-reduce"] == 4096
+    assert cb["all-gather"] == 64 * 128 * 2
+    assert cb["reduce-scatter"] == 64
+    assert cb["collective-permute"] == 64  # start counted once, done skipped
+    assert cb["total"] == 4096 + 16384 + 64 + 64
