@@ -1,0 +1,110 @@
+"""Forward-compatibility shims for older JAX runtimes.
+
+The codebase is written against the modern JAX surface (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.AxisType``, the positional
+``AbstractMesh(axis_sizes, axis_names)`` constructor). On runtimes where
+those names are missing (jax 0.4.x) this module installs equivalent shims so
+every call site — including the test-suite snippets that run in spawned
+interpreters — works unchanged. On a new-enough JAX every block below is a
+no-op, so the shims age out automatically.
+
+Imported for its side effects from ``repro/__init__.py``; safe to import
+multiple times.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.sharding as jshard
+
+__all__ = ["install"]
+
+
+def _abstract_mesh_needs_shim() -> bool:
+    try:
+        jshard.AbstractMesh((1,), ("x",))
+        return False
+    except TypeError:
+        return True
+
+
+@functools.cache
+def install() -> None:
+    # -- AbstractMesh(axis_sizes, axis_names) ------------------------------
+    # jax 0.4.x spells it AbstractMesh(tuple[(name, size), ...]). Subclass
+    # (not wrap) so isinstance checks inside jax keep passing.
+    if _abstract_mesh_needs_shim():
+        _Real = jshard.AbstractMesh
+
+        class AbstractMesh(_Real):  # noqa: D401 - thin signature adapter
+            def __init__(self, *args, **kwargs):
+                kwargs.pop("axis_types", None)  # 0.4.x meshes are all "auto"
+                if len(args) == 2:
+                    axis_sizes, axis_names = args
+                    args = (tuple(zip(axis_names, axis_sizes)),)
+                super().__init__(*args, **kwargs)
+
+        AbstractMesh.__name__ = "AbstractMesh"
+        jshard.AbstractMesh = AbstractMesh
+
+    # -- AxisType / make_mesh(axis_types=...) ------------------------------
+    if not hasattr(jshard, "AxisType"):
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jshard.AxisType = AxisType
+
+        _real_make_mesh = jax.make_mesh
+
+        @functools.wraps(_real_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            # 0.4.x has no axis_types concept; every axis behaves as Auto,
+            # which is exactly what this codebase requests.
+            return _real_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    # -- jax.set_mesh ------------------------------------------------------
+    if not hasattr(jax, "set_mesh"):
+
+        def set_mesh(mesh):
+            """Use the mesh as a context manager (0.4.x resource-env entry).
+
+            ``jax.sharding.Mesh`` is itself a context manager on 0.4.x, and
+            entering it is what lets bare ``PartitionSpec``s (e.g. in
+            ``with_sharding_constraint``) resolve against the mesh.
+            """
+            return mesh
+
+        jax.set_mesh = set_mesh
+
+    # -- jax.shard_map -----------------------------------------------------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        jax.shard_map = _shard_map
+
+    # -- Compiled.cost_analysis() ------------------------------------------
+    # 0.4.x returns list[dict] (one per program); modern jax returns the
+    # dict directly. Normalize so callers can do dict(compiled.cost_analysis()).
+    try:
+        from jax._src import stages as _stages
+
+        _real_cost = _stages.Compiled.cost_analysis
+
+        @functools.wraps(_real_cost)
+        def _cost_analysis(self):
+            out = _real_cost(self)
+            if isinstance(out, (list, tuple)):
+                return out[0] if out else {}
+            return out
+
+        _stages.Compiled.cost_analysis = _cost_analysis
+    except Exception:  # pragma: no cover - layout changed; modern jax is fine
+        pass

@@ -1,0 +1,52 @@
+"""``repro.dist`` — the distribution subsystem.
+
+Three orthogonal pieces, consumed by every layer of the stack:
+
+  * :mod:`repro.dist.sharding` — PartitionSpec computation for parameters,
+    batches and KV caches: path-pattern rules + divisibility tightening, so
+    the same code serves full production configs, ``.reduced()`` CPU smoke
+    configs, and abstract (device-free) dry-run meshes.
+  * :mod:`repro.dist.context` — context-local activation-sharding rules;
+    model code calls ``constrain(x, role)`` which is a no-op unless a rules
+    context is installed (CPU paths stay clean).
+  * :mod:`repro.dist.compression` — blockwise int8 quantization and
+    error-feedback compressed gradient all-reduce for cheap cross-device
+    training.
+"""
+
+from repro.dist import compression, context, sharding
+from repro.dist.compression import (
+    dequantize_int8,
+    init_residuals,
+    quantize_int8,
+    reduce_grads_compressed,
+)
+from repro.dist.context import activation_rules, constrain
+from repro.dist.sharding import (
+    batch_shardings,
+    batch_spec,
+    cache_shardings,
+    param_shardings,
+    param_specs,
+    spec_for,
+    tighten,
+)
+
+__all__ = [
+    "sharding",
+    "context",
+    "compression",
+    "tighten",
+    "spec_for",
+    "param_specs",
+    "param_shardings",
+    "batch_spec",
+    "batch_shardings",
+    "cache_shardings",
+    "activation_rules",
+    "constrain",
+    "quantize_int8",
+    "dequantize_int8",
+    "init_residuals",
+    "reduce_grads_compressed",
+]

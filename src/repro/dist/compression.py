@@ -1,0 +1,99 @@
+"""Int8 compression for gradients and cross-device collectives.
+
+``quantize_int8`` is blockwise symmetric: the flattened tensor is split into
+fixed-size blocks, each carrying one f32 scale = max|x|/127, so the
+elementwise error is bounded by scale/2 (and every block scale is bounded by
+the tensor's global scale).
+
+``reduce_grads_compressed`` is an error-feedback compressed mean all-reduce
+(the 1-bit-Adam / EF-SGD family, arXiv:2102.02888): each device quantizes
+(grad + carried residual), the quantized values are mean-reduced, and each
+device keeps its local quantization error as the next step's residual — so
+the compression error is fed back rather than accumulated. Note this
+implementation reproduces the *numerics* of the compressed exchange (the
+reduce itself is an f32 ``pmean`` of the dequantized values, which XLA's
+replication checker can verify); a bandwidth-optimal deployment would
+all-gather the int8 payload + scales (~4x less wire traffic) and average
+after dequantizing, which is bit-identical to what is computed here.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "BLOCK",
+    "quantize_int8",
+    "dequantize_int8",
+    "init_residuals",
+    "reduce_grads_compressed",
+]
+
+# 256 int8 payload bytes + one f32 scale per block: ~1.6% scale overhead.
+BLOCK = 256
+
+
+def quantize_int8(x: jax.Array, *, block: int = BLOCK):
+    """Blockwise symmetric int8. Any shape -> (q (nb, block) i8, scale (nb,) f32).
+
+    The tensor is flattened and zero-padded to a whole number of blocks;
+    all-zero blocks get scale 1.0 so dequantization is well-defined.
+    """
+    xf = jnp.ravel(x).astype(jnp.float32)
+    pad = (-xf.size) % block
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    xb = xf.reshape(-1, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    """Inverse of :func:`quantize_int8`; ``shape`` trims the block padding."""
+    flat = (q.astype(jnp.float32) * scale[..., None]).reshape(-1)
+    return flat[: math.prod(shape)].reshape(shape).astype(dtype)
+
+
+def init_residuals(grads):
+    """Zero error-feedback residuals, one f32 leaf per gradient leaf.
+
+    Same shapes as the gradients themselves — in stacked data-parallel
+    layouts the leading dim is the per-device axis, and each device's shard
+    carries that device's residual.
+    """
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def reduce_grads_compressed(grads, residuals, axis_name: str, *, block: int = BLOCK):
+    """Error-feedback int8 mean all-reduce over a bound mesh axis.
+
+    Must run inside ``shard_map``/``pmap`` where ``axis_name`` is bound.
+    Returns ``(reduced, new_residuals)``: ``reduced`` is the across-axis
+    mean of the dequantized gradients (identical on every device, so it can
+    be emitted with a replicated out_spec), ``new_residuals`` is each
+    device's local quantization error to carry into the next step.
+    """
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r.astype(jnp.float32)
+        q, s = quantize_int8(gf, block=block)
+        local = dequantize_int8(q, s, g.shape, jnp.float32)
+        new_r = gf - local
+        # Mean of the per-device *dequantized* values — numerically identical
+        # to gathering the int8 payload and averaging after dequantization
+        # (the bandwidth-optimal wire format), but expressed as a pmean so
+        # shard_map can statically prove the output is replicated.
+        out = jax.lax.pmean(local, axis_name).astype(g.dtype)
+        return out, new_r
+
+    flat_g, tree = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_flatten(residuals)[0]
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    reduced = jax.tree_util.tree_unflatten(tree, [o for o, _ in pairs])
+    new_res = jax.tree_util.tree_unflatten(tree, [r for _, r in pairs])
+    return reduced, new_res

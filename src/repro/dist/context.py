@@ -1,0 +1,68 @@
+"""Context-local activation-sharding rules.
+
+Model code annotates intermediate activations by *role*::
+
+    h = constrain(h, "residual")          # transformer residual stream
+    buf = constrain(buf, "moe_buffer")    # (E, C, d) dispatch buffer
+    x = constrain(x, "moe_tokens")        # dropless sorted token stream
+
+Outside an :func:`activation_rules` context — unit tests, CPU smoke runs,
+single-device serving — ``constrain`` is an exact no-op, so the model code
+carries no distribution dependency on those paths. Inside one (the dry-run,
+sequence-sharded training), roles present in the rules dict are lowered to
+``with_sharding_constraint`` so GSPMD keeps the annotated layout instead of
+re-deriving it per-op. Unknown roles are ignored: a rules dict only needs
+to name the activations it cares about.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Mapping, Optional
+
+import jax
+
+__all__ = ["activation_rules", "constrain", "current_rules"]
+
+# role -> PartitionSpec | NamedSharding. ContextVar (not a module global) so
+# rules stay scoped under async/threaded drivers.
+_RULES: ContextVar[Optional[Mapping[str, object]]] = ContextVar(
+    "activation_rules", default=None
+)
+
+
+def current_rules() -> Optional[Mapping[str, object]]:
+    """The active role->spec mapping, or None when no context is installed."""
+    return _RULES.get()
+
+
+@contextlib.contextmanager
+def activation_rules(rules: Optional[Mapping[str, object]]):
+    """Install ``rules`` for the dynamic extent of the block.
+
+    ``rules=None`` (or ``{}``) explicitly disables constraining — callers can
+    pass a computed-or-None value without branching. Nesting replaces (does
+    not merge) the outer rules.
+    """
+    token = _RULES.set(dict(rules) if rules else None)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def constrain(x: jax.Array, role: str) -> jax.Array:
+    """Apply the sharding rule registered for ``role`` to ``x``, if any.
+
+    Bare ``PartitionSpec`` rules resolve against the ambient mesh (the
+    caller's ``jax.set_mesh`` block); ``NamedSharding`` rules carry their
+    own mesh. No-op when no rules context is active or the role is unlisted.
+    """
+    rules = _RULES.get()
+    if not rules:
+        return x
+    spec = rules.get(role)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,239 @@
+"""Sharding specs: divisibility tightening + path-pattern parameter rules.
+
+The contract with the rest of the codebase is *pattern + divisibility*:
+
+  1. Leaf path names decide where a tensor would like to live on the mesh
+     (Megatron-style: TP on the head/expert-ffn dim of input projections,
+     TP on the contraction dim of output projections, FSDP on the other
+     matrix dim, vocab-sharded embeddings).
+  2. :func:`tighten` then drops every mesh axis that does not evenly divide
+     its dim, so the same rules serve full production configs, tiny
+     ``.reduced()`` CPU configs, GQA head counts smaller than the TP degree,
+     and factored optimizer statistics (whose shapes are params with a dim
+     reduced away).
+
+Everything here works on both real ``Mesh``es and ``AbstractMesh`` — spec
+computation allocates nothing and needs no devices, which is what lets the
+512-chip dry-run and the 1-CPU test suite share one code path.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+
+__all__ = [
+    "tighten",
+    "spec_for",
+    "param_specs",
+    "param_shardings",
+    "batch_spec",
+    "batch_shardings",
+    "cache_shardings",
+]
+
+
+# --------------------------------------------------------------------------
+# divisibility tightening
+# --------------------------------------------------------------------------
+
+
+def _mesh_sizes(mesh) -> dict[str, int]:
+    """Axis name -> size for Mesh and AbstractMesh alike."""
+    return dict(mesh.shape)
+
+
+def _as_tuple(entry) -> tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def _collapse(names: tuple[str, ...]):
+    """P((), ) -> None, P(('a',)) -> 'a' so specs compare cleanly."""
+    if not names:
+        return None
+    if len(names) == 1:
+        return names[0]
+    return names
+
+
+def tighten(shape: Sequence[int], spec: Sequence, mesh) -> P:
+    """Drop mesh axes that do not evenly divide their dim.
+
+    ``spec`` has one entry per dim of ``shape``; each entry is an axis name,
+    a tuple of axis names (multi-axis sharding — the longest *prefix* whose
+    combined size divides the dim is kept), or None. Axes absent from the
+    mesh, or already consumed by an earlier dim, are dropped too. The result
+    always has exactly ``len(shape)`` entries so consumers can zip it
+    against shapes.
+    """
+    if len(spec) != len(shape):
+        raise ValueError(f"spec {tuple(spec)!r} does not match shape {tuple(shape)!r}")
+    sizes = _mesh_sizes(mesh)
+    out = []
+    used: set[str] = set()
+    for dim, entry in zip(shape, spec):
+        names = tuple(a for a in _as_tuple(entry) if a in sizes and a not in used)
+        keep: tuple[str, ...] = ()
+        prod = 1
+        for a in names:
+            prod *= sizes[a]
+            if dim % prod:
+                break
+            keep = keep + (a,)
+        used.update(keep)
+        out.append(_collapse(keep))
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+# Column-parallel projections: (.., d_in, d_out) with d_out the TP dim.
+_TP_OUT_COL = r"(?:wq|wk|wv|w_gate|w_up|in_proj|proj_in|vision_proj|lm_head)"
+# Row-parallel projections: (.., d_in, d_out) with d_in the TP dim.
+_TP_IN_ROW = r"(?:wo|w_down|out_proj)"
+
+# (pattern, trailing-dims spec). Entries: "fsdp" -> pcfg.fsdp_axes (tuple,
+# prefix-tightened), "tp" -> pcfg.tensor_axis, None -> replicated. The spec
+# aligns to the *last* len(spec) dims; leading dims (scan-stacked layers,
+# hybrid groups, experts) are replicated unless a rule says otherwise.
+_RULES: list[tuple[re.Pattern, tuple]] = [
+    (re.compile(r"embed/table$"), ("tp", "fsdp")),
+    (re.compile(_TP_OUT_COL + r"(?:/w)?$"), ("fsdp", "tp")),
+    (re.compile(_TP_OUT_COL + r"/b$"), ("tp",)),
+    (re.compile(_TP_IN_ROW + r"(?:/w)?$"), ("tp", "fsdp")),
+    (re.compile(_TP_IN_ROW + r"/b$"), ("fsdp",)),
+    (re.compile(r"router(?:/w)?$"), ("fsdp", None)),  # router stays f32/replicated-out
+    (re.compile(r"router/b$"), (None,)),
+    (re.compile(r"conv_w$"), (None, "tp")),  # depthwise conv: channel dim
+]
+
+# Fallback for everything else (norm scales, biases, SSM scalars, factored
+# optimizer row/col stats): ZeRO-style shard of the trailing dim over the
+# FSDP axes; tighten silently replicates the small/odd ones.
+_FALLBACK = ("fsdp",)
+
+
+def _path_str(path) -> str:
+    """'layers/attn/wq/w' from a jax key path."""
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+    )
+
+
+def _resolve(entry, pcfg: ParallelConfig):
+    if entry == "fsdp":
+        return tuple(pcfg.fsdp_axes)
+    if entry == "tp":
+        return pcfg.tensor_axis
+    return entry
+
+
+def spec_for(path: str, shape: Sequence[int], pcfg: ParallelConfig, mesh) -> P:
+    """PartitionSpec for one parameter leaf (full rank, tightened)."""
+    rank = len(shape)
+    trailing: tuple = _FALLBACK
+    for pat, rule in _RULES:
+        if pat.search(path):
+            trailing = rule
+            break
+    trailing = trailing[max(0, len(trailing) - rank):]
+    full = (None,) * (rank - len(trailing)) + tuple(
+        _resolve(e, pcfg) for e in trailing
+    )
+    return tighten(shape, full, mesh)
+
+
+def param_specs(params, pcfg: ParallelConfig, mesh):
+    """Tree of PartitionSpecs matching ``params`` (works on ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: spec_for(_path_str(path), x.shape, pcfg, mesh), params
+    )
+
+
+def param_shardings(params, pcfg: ParallelConfig, mesh):
+    """Tree of NamedShardings matching ``params``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, pcfg, mesh)
+    )
+
+
+# --------------------------------------------------------------------------
+# batches
+# --------------------------------------------------------------------------
+
+
+def batch_spec(global_batch: int, pcfg: ParallelConfig, mesh) -> P:
+    """Spec for the leading batch dim: data axes, tightened (batch=1 on a
+    16-way data mesh falls back to replication rather than erroring)."""
+    axes = tuple(a for a in pcfg.data_axes if a in _mesh_sizes(mesh))
+    return tighten((global_batch,), (axes,), mesh)
+
+
+def batch_shardings(batch, pcfg: ParallelConfig, mesh):
+    """Batch-dim sharding for every leaf of a batch pytree."""
+
+    def leaf(x):
+        rank = len(x.shape)
+        if rank == 0:
+            return NamedSharding(mesh, P())
+        b = batch_spec(x.shape[0], pcfg, mesh)[0]
+        return NamedSharding(mesh, P(b, *([None] * (rank - 1))))
+
+    return jax.tree.map(leaf, batch)
+
+
+# --------------------------------------------------------------------------
+# KV caches / decode state
+# --------------------------------------------------------------------------
+
+
+def cache_shardings(caches, pcfg: ParallelConfig, mesh):
+    """Shardings for serving caches (stacked (L, B, S, H[, hd]) layout).
+
+    Batch dim goes on the data axes. KV heads go on the tensor axis when
+    the head count divides it; GQA head counts that don't (hkv < TP degree)
+    fall back to sharding the *sequence* dim on the tensor axis — decode
+    attention reduces over sequence, so GSPMD turns that into a cheap
+    per-step reduce instead of replicating multi-GB caches. SSM decode
+    state ('conv'/'ssd' leaves) shards its batch dim; scalars ('len',
+    'kv_len') replicate.
+    """
+    sizes = _mesh_sizes(mesh)
+    data_axes = tuple(a for a in pcfg.data_axes if a in sizes)
+    tp = pcfg.tensor_axis if pcfg.tensor_axis in sizes else None
+
+    def batch_entry(dim: int):
+        return tighten((dim,), (data_axes,), mesh)[0]
+
+    def leaf(path, x):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        shape = x.shape
+        rank = len(shape)
+        spec = [None] * rank
+        if name in ("k", "v", "k_scale", "v_scale"):
+            h_dim = rank - 2 if name in ("k", "v") else rank - 1
+            s_dim, b_dim = h_dim - 1, h_dim - 2
+            if b_dim >= 0:
+                spec[b_dim] = batch_entry(shape[b_dim])
+                if tp is not None and shape[h_dim] % sizes[tp] == 0:
+                    spec[h_dim] = tp
+                elif tp is not None and shape[s_dim] % sizes[tp] == 0:
+                    spec[s_dim] = tp
+        elif name == "conv" and rank >= 3:  # (.., B, width-1, channels)
+            spec[rank - 3] = batch_entry(shape[rank - 3])
+        elif name == "ssd" and rank >= 4:  # (.., B, H, P, N)
+            spec[rank - 4] = batch_entry(shape[rank - 4])
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, caches)

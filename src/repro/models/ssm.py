@@ -85,7 +85,10 @@ def ssd_chunked(
     # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (c_i.b_j) x_j
     diff = cum_h[..., :, None] - cum_h[..., None, :]          # (b,nc,h,c,c)
     tril = jnp.tril(jnp.ones((chunk, chunk), bool))
-    decay = jnp.where(tril, jnp.exp(diff), 0.0)
+    # double-where: masked (upper-triangle) diffs are >= 0 and can overflow
+    # exp to inf, which the backward turns into 0*inf = NaN grads — zero the
+    # exponent under the mask too so both passes stay finite.
+    decay = jnp.where(tril, jnp.exp(jnp.where(tril, diff, 0.0)), 0.0)
     cb = jnp.einsum("bzin,bzjn->bzij", cf, bf)                # (b,nc,c,c)
     w = cb[:, :, None] * decay * dtf.transpose(0, 1, 3, 2)[..., None, :]
     y_intra = jnp.einsum("bzhij,bzjhp->bzihp", w, xf)

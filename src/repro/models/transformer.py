@@ -205,6 +205,16 @@ def fill_cache(cfg: ModelConfig, cache: dict, k: jax.Array, v: jax.Array) -> dic
     size = cache["k"].shape[1]
     if s >= size:
         k, v = k[:, -size:], v[:, -size:]
+        if cfg.window is not None:
+            # Ring-buffer layout: decode writes position p at index p % size,
+            # so the kept tail (positions s-size..s-1) must land on those
+            # indices — otherwise the first decode writes evict the wrong
+            # (non-oldest) entries. Rolling by s % size puts position p at
+            # index p % size.
+            shift = s % size
+            if shift:
+                k = jnp.roll(k, shift, axis=1)
+                v = jnp.roll(v, shift, axis=1)
     cache = _cache_write(cfg, cache, "k", k, 0)
     cache = _cache_write(cfg, cache, "v", v, 0)
     cache["len"] = jnp.asarray(s, jnp.int32)

@@ -61,6 +61,27 @@ class ServeEngine:
         under the mesh context (GSPMD propagates cache/batch shardings)."""
         self.lm = lm
         self.mesh = mesh
+        # Cache capacity model, shared by validation here and the budgeting
+        # in _generate_batch: prefill writes bucket + prefix tokens (VLM
+        # prepends prefix embeddings) and decode writes max_new - 1 more
+        # (the last sampled token is never written back). Only
+        # full-attention caches are max_len-bounded — SSM decode state is
+        # O(1) and sliding-window archs use a ring buffer.
+        self._prefix = (
+            min(lm.cfg.n_prefix_embeds, 8) if lm.cfg.family == "vlm" else 0
+        )
+        bounded = lm.cfg.window is None and lm.cfg.family != "ssm"
+        if bounded and max_len <= self._prefix:
+            detail = (
+                f"the {self._prefix} VLM prefix embeddings leave no room"
+                if self._prefix
+                else "it must be positive"
+            )
+            raise ValueError(
+                f"max_len={max_len} gives a zero-capacity KV cache ({detail}); "
+                f"use max_len > {self._prefix}"
+            )
+        self._cap = max_len - self._prefix if bounded else None
         if mesh is not None:
             pcfg = pcfg or ParallelConfig(fsdp_axes=("data",), data_axes=("data",))
             params = jax.device_put(params, shd.param_shardings(params, pcfg, mesh))
@@ -76,13 +97,23 @@ class ServeEngine:
             jax.set_mesh(self.mesh) if self.mesh is not None else contextlib.nullcontext()
         )
 
-    def _pad_batch(self, prompts: Sequence[np.ndarray]) -> tuple[jnp.ndarray, int]:
-        n = len(prompts)
-        length = max(len(p) for p in prompts)
+    def _pad_batch(
+        self, prompts: Sequence[np.ndarray], max_bucket: Optional[int] = None
+    ) -> jnp.ndarray:
+        # Shared prefill bucket. Bounded (full-attention) caches cap it at
+        # the cache capacity: an overlong prompt keeps only its most recent
+        # tokens (causal LM — the tail conditions generation) instead of
+        # silently overflowing the prefill bucket and then clamp-overwriting
+        # the cache's last slot every decode step. max_bucket=None (SSM
+        # state, SWA ring buffers) leaves prompts untouched.
+        length = max(1, max(len(p) for p in prompts))  # all-empty -> 1 EOS pad
+        if max_bucket is not None:
+            length = min(length, max_bucket)
         out = np.full((self.batch_size, length), EOS, np.int32)
         for i, p in enumerate(prompts):
+            p = p[-length:]
             out[i, length - len(p) :] = p  # left-pad into a shared bucket
-        return jnp.asarray(out), n
+        return jnp.asarray(out)
 
     def generate(self, requests: Sequence[Request]) -> list[GenerationResult]:
         results: list[GenerationResult] = []
@@ -92,7 +123,21 @@ class ServeEngine:
         return results
 
     def _generate_batch(self, group: Sequence[Request]) -> list[GenerationResult]:
-        tokens, n = self._pad_batch([r.tokens for r in group])
+        # Prompts get priority for the bounded capacity (see __init__ for
+        # the capacity model); a request whose max_new_tokens exceeds what
+        # remains after the shared bucket is clamped (visible via .steps),
+        # not failed — one greedy request must not abort or context-starve
+        # the rest of the batch.
+        prefix, cap = self._prefix, self._cap
+        tokens = self._pad_batch([r.tokens for r in group], max_bucket=cap)
+        bucket = tokens.shape[1]
+        new_limits = [
+            r.max_new_tokens
+            if cap is None
+            else max(0, min(r.max_new_tokens, cap - bucket + 1))
+            for r in group
+        ]
+        max_new = max(new_limits)
         if self.lm.cfg.family == "encdec":
             b, s = tokens.shape
             batch = {
@@ -101,19 +146,17 @@ class ServeEngine:
             }
         elif self.lm.cfg.family == "vlm":
             b, s = tokens.shape
-            p = min(self.lm.cfg.n_prefix_embeds, 8)
             batch = {
                 "tokens": tokens,
-                "prefix_embeds": jnp.zeros((b, p, self.lm.cfg.d_model), self.lm.cfg.activation_dtype()),
+                "prefix_embeds": jnp.zeros((b, prefix, self.lm.cfg.d_model), self.lm.cfg.activation_dtype()),
             }
         else:
             batch = {"tokens": tokens}
 
         with self._mesh_ctx():
             logits, caches = self._prefill(self.params, batch)
-        max_new = max(r.max_new_tokens for r in group)
         generated = np.zeros((len(group), max_new), np.int32)
-        done = np.zeros(len(group), bool)
+        done = np.asarray([lim == 0 for lim in new_limits])  # 0-limit rows emit nothing
         steps = np.zeros(len(group), np.int32)
 
         cur = self._sample(logits[:, -1], group)
@@ -122,7 +165,7 @@ class ServeEngine:
                 if not done[j]:
                     generated[j, t] = int(cur[j, 0])
                     steps[j] = t + 1
-                    if int(cur[j, 0]) == EOS or t + 1 >= group[j].max_new_tokens:
+                    if int(cur[j, 0]) == EOS or t + 1 >= new_limits[j]:
                         done[j] = True
             if done.all():
                 break

@@ -1,9 +1,18 @@
 import os
 import sys
 
-# Make `repro` importable without installation; tests see 1 CPU device
-# (the 512-device flag belongs to the dry-run ONLY — assignment rule).
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# `repro` comes from pyproject's pythonpath = ["src"] pytest config; tests
+# see 1 CPU device (the 512-device flag belongs to the dry-run ONLY —
+# assignment rule).
+
+try:  # property tests use hypothesis; fall back to the bundled stub
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
 
 import jax
 import pytest

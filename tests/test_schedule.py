@@ -65,3 +65,68 @@ def test_worker_assignment_round_robin():
     s = KVSchedule(Order.CYCLIC, n_q=10, n_kv=2)
     a = s.worker_assignments(3)
     assert a[0] == [0, 3, 6, 9] and a[1] == [1, 4, 7] and a[2] == [2, 5, 8]
+
+
+# --------------------------------------------------------------------------
+# wavefront_trace edge cases
+# --------------------------------------------------------------------------
+
+
+def _kv_tiles_touched(trace):
+    """q_tile -> list of KV tile ids in visit order, from a wavefront trace."""
+    per_worker_q = {}
+    touched = {}
+    for w, tensor, tile in trace:
+        if tensor == "Q":
+            per_worker_q[w] = tile
+            touched.setdefault(tile, [])
+        elif tensor == "K":
+            touched[per_worker_q[w]].append(tile)
+    return touched
+
+
+@pytest.mark.parametrize("order", list(Order))
+def test_wavefront_trace_causal_partial_last_tile(order):
+    """seq=200 @ 64-row tiles -> 4 tiles, the last one partial: causal
+    trimming must still give q tile i exactly i+1 KV tiles, each visited
+    once, covering 0..i."""
+    s = KVSchedule(order, n_q=4, n_kv=4, causal=True, q_block=64, kv_block=64)
+    touched = _kv_tiles_touched(s.wavefront_trace(n_workers=3))
+    assert sorted(touched) == [0, 1, 2, 3]
+    for q_tile, kvs in touched.items():
+        assert sorted(kvs) == list(range(q_tile + 1)), (q_tile, kvs)
+    # K accesses == sum of trimmed ranges, not n_q * n_kv
+    assert sum(len(v) for v in touched.values()) == 1 + 2 + 3 + 4
+
+
+@pytest.mark.parametrize("n_workers", [5, 8, 64])
+def test_wavefront_trace_more_workers_than_q_tiles(n_workers):
+    """Workers beyond n_q have empty assignments; the trace must terminate
+    and still cover every (q, kv) pair exactly once."""
+    s = KVSchedule(Order.SAWTOOTH, n_q=3, n_kv=4)
+    trace = list(s.wavefront_trace(n_workers=n_workers))
+    touched = _kv_tiles_touched(trace)
+    assert sorted(touched) == [0, 1, 2]
+    assert all(sorted(v) == [0, 1, 2, 3] for v in touched.values())
+    assert {w for (w, _, _) in trace} == set(range(3))  # idle workers silent
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("n_workers", [1, 2, 7])
+def test_wavefront_trace_length_order_invariant(causal, n_workers):
+    """Reordering is a pure permutation: sawtooth and cyclic traces have
+    identical length and identical per-tensor access counts."""
+    traces = {
+        order: list(
+            KVSchedule(
+                order, n_q=5, n_kv=6, causal=causal, q_block=64, kv_block=64
+            ).wavefront_trace(n_workers)
+        )
+        for order in Order
+    }
+    a, b = traces[Order.CYCLIC], traces[Order.SAWTOOTH]
+    assert len(a) == len(b)
+    for tensor in ("Q", "K", "V", "O"):
+        na = sorted(t[2] for t in a if t[1] == tensor)
+        nb = sorted(t[2] for t in b if t[1] == tensor)
+        assert na == nb, tensor
