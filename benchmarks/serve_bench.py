@@ -1,0 +1,161 @@
+"""Serve-throughput smoke benchmark: static vs continuous scheduling.
+
+Serves one mixed-length request stream (many short prompts, a few long
+high-``max_new`` stragglers, staggered arrivals) through both schedulers of
+the ServeEngine on CPU and reports tokens/s. The static path pays for its
+stragglers — every group decodes until its slowest member finishes, short
+requests idling in their slots — while the continuous scheduler refills
+slots from the waiting queue mid-decode, so the same hardware closes the
+stream in far fewer decode steps. Also reports the ``cache_sim``
+page-granular reuse-distance delta for cyclic vs sawtooth page traversal in
+decode (the serving-side analogue of the paper's Fig. 8).
+
+Writes ``BENCH_serve.json`` (CI artifact; scheduler regressions show up as
+``speedup`` < 1) and prints a one-line summary per scheduler.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py            # full smoke
+  PYTHONPATH=src python benchmarks/serve_bench.py --quick    # CI-sized
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def build_requests(np, vocab, *, n_short: int, n_long: int, max_new_long: int):
+    """Interleave short and long requests with staggered arrivals.
+
+    Interleaving puts roughly one long straggler in every static group —
+    the adversarial-but-realistic shape for fixed-group scheduling.
+    """
+    from repro.serve import Request
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    n_groups = max(n_long, 1)
+    per_group = (n_short + n_long) // n_groups if n_groups else 0
+    rid = 0
+    for g in range(n_groups):
+        reqs.append(
+            Request(
+                tokens=rng.integers(2, vocab, size=24).astype(np.int32),
+                max_new_tokens=max_new_long,
+                rid=rid,
+                arrival=g,
+            )
+        )
+        rid += 1
+        for _ in range(max(per_group - 1, 0)):
+            reqs.append(
+                Request(
+                    tokens=rng.integers(2, vocab, size=int(rng.integers(4, 9))).astype(
+                        np.int32
+                    ),
+                    max_new_tokens=4,
+                    rid=rid,
+                    arrival=g,
+                )
+            )
+            rid += 1
+    return reqs
+
+
+def time_engine(eng, make_requests, repeats: int = 3) -> dict:
+    eng.generate(make_requests())  # warm-up: compile every bucket/decode shape
+    best, results = None, None
+    for _ in range(repeats):  # best-of-N: the streams are short, CI CPUs noisy
+        reqs = make_requests()
+        t0 = time.time()
+        results = eng.generate(reqs)
+        dt = time.time() - t0
+        best = dt if best is None else min(best, dt)
+    tokens = sum(r.steps for r in results)
+    return {
+        "requests": len(results),
+        "tokens": tokens,
+        "seconds": round(best, 4),
+        "tok_per_s": round(tokens / best, 2) if best > 0 else float("inf"),
+    }
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.cache_sim import simulate_paged_decode
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--quick", action="store_true", help="CI-sized stream")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    n_short, n_long, max_new_long = (9, 3, 24) if args.quick else (12, 4, 48)
+    make = lambda: build_requests(
+        np, cfg.vocab, n_short=n_short, n_long=n_long, max_new_long=max_new_long
+    )
+
+    eng_static = ServeEngine(
+        lm, params, batch_size=args.batch_size, max_len=args.max_len
+    )
+    eng_cont = ServeEngine(
+        lm,
+        params,
+        batch_size=args.batch_size,
+        max_len=args.max_len,
+        scheduler="continuous",
+        page_size=args.page_size,
+    )
+
+    report = {
+        "arch": args.arch,
+        "batch_size": args.batch_size,
+        "max_len": args.max_len,
+        "page_size": args.page_size,
+        "static": time_engine(eng_static, make),
+        "continuous": time_engine(eng_cont, make),
+    }
+    report["speedup"] = round(
+        report["continuous"]["tok_per_s"] / report["static"]["tok_per_s"], 3
+    )
+
+    # Page-locality twin of the serving decode loop (cache_sim §page trace):
+    # a batch at the benchmark's lengths, decode max_new_long steps.
+    lens = [24] * n_long + [96] * 1
+    report["page_trace"] = {
+        order: simulate_paged_decode(order, lens, max_new_long, args.page_size)
+        for order in ("cyclic", "sawtooth")
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for name in ("static", "continuous"):
+        r = report[name]
+        print(
+            f"{name:11s} {r['tokens']:4d} tokens in {r['seconds']:.2f}s "
+            f"-> {r['tok_per_s']:.1f} tok/s"
+        )
+    pt = report["page_trace"]
+    print(
+        f"speedup {report['speedup']}x; page reuse distance "
+        f"cyclic {pt['cyclic']['mean_reuse_distance']:.1f} -> "
+        f"sawtooth {pt['sawtooth']['mean_reuse_distance']:.1f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, supports_continuous
 from repro.train.checkpoint import latest_step, restore_pytree
 
 
@@ -28,6 +28,9 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--attn-order", default="sawtooth")
+    ap.add_argument(
+        "--scheduler", default="auto", choices=["auto", "static", "continuous"]
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -44,7 +47,11 @@ def main():
         except KeyError:
             print("checkpoint incompatible with this config; using random init")
 
-    eng = ServeEngine(lm, params, batch_size=4, max_len=256)
+    scheduler = args.scheduler
+    if scheduler == "auto":
+        scheduler = "continuous" if supports_continuous(cfg) else "static"
+    print(f"scheduler: {scheduler}")
+    eng = ServeEngine(lm, params, batch_size=4, max_len=256, scheduler=scheduler)
     rng = np.random.default_rng(0)
     reqs = [
         Request(

@@ -66,6 +66,8 @@ class ModelConfig:
     # vlm / audio stubs: number of prefix embedding positions fed by the
     # (stubbed) modality frontend for train/prefill shapes
     n_prefix_embeds: int = 0
+    # serving
+    eos_id: int = 1                          # end-of-sequence token id
     # execution
     dtype: str = "bfloat16"                  # activation/compute dtype
     param_dtype: str = "float32"
@@ -82,6 +84,13 @@ class ModelConfig:
     kv_cache_dtype: str = "bfloat16"         # bfloat16 | int8 (per-vector
                                              # symmetric scales; halves the
                                              # decode-cache HBM footprint)
+    kv_layout: str = "contiguous"            # contiguous | paged (shared page
+                                             # pool + per-sequence block
+                                             # tables; full attention only —
+                                             # DESIGN.md §8)
+    page_size: Optional[int] = None          # KV page rows; defaults to
+                                             # kv_block so pages coincide with
+                                             # the schedule's KV tiles
     scan_layers: bool = True                 # False: python-unrolled layer loop
                                              # (dry-run roofline extrapolation —
                                              # XLA counts while bodies once)

@@ -20,9 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedule import Order, kv_index
+from repro.core.schedule import KVSchedule, Order, kv_index
 
-__all__ = ["mha_reference", "flash_attention", "decode_attention"]
+__all__ = ["mha_reference", "flash_attention", "decode_attention", "paged_decode_attention"]
 
 NEG_INF = float(np.finfo(np.float32).min)
 
@@ -203,13 +203,34 @@ def decode_attention(
     *,
     window: Optional[int] = None,
     scale: Optional[float] = None,
+    block_table: Optional[jax.Array] = None,
+    order: Order | str = Order.CYCLIC,
 ) -> jax.Array:
     """Single-position decode attention against a (possibly padded) KV cache.
 
-    q: (B, 1, Hq, D); caches: (B, S_max, Hkv, D); cache_len: valid prefix
-    length (scalar or (B,)). Linear in S_max — used for decode_32k/long_500k
-    serve steps. Window applies Mistral-style SWA over absolute positions.
+    Contiguous layout: q (B, 1, Hq, D); caches (B, S_max, Hkv, D);
+    cache_len: valid prefix length (scalar or (B,)). Linear in S_max — used
+    for decode_32k/long_500k serve steps. Window applies Mistral-style SWA
+    over absolute positions.
+
+    Paged layout (``block_table`` given): caches are shared page pools
+    (n_pages, page, Hkv, D); ``block_table`` (B, n_blocks) maps each row's
+    logical page j to a physical pool page, and pages are visited in
+    ``KVSchedule`` order (``order='sawtooth'`` alternates direction per
+    decode step, parity keyed on ``cache_len``) — see
+    :func:`paged_decode_attention`.
     """
+    if block_table is not None:
+        return paged_decode_attention(
+            q,
+            k_cache,
+            v_cache,
+            cache_len,
+            block_table,
+            window=window,
+            scale=scale,
+            order=order,
+        )
     b, one, hq, d = q.shape
     assert one == 1
     _, s_max, hkv, _ = k_cache.shape
@@ -225,4 +246,79 @@ def decode_attention(
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    cache_len: jax.Array | int,
+    block_table: jax.Array,
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    order: Order | str = Order.CYCLIC,
+) -> jax.Array:
+    """Blockwise decode attention over a paged KV pool, schedule-ordered.
+
+    q: (B, 1, Hq, D). k_pool/v_pool: (n_pages, page, Hkv, D) — one shared
+    pool across the batch. block_table: (B, n_blocks) int32, logical page j
+    of row b lives in pool page ``block_table[b, j]``. cache_len: (B,) or
+    scalar valid lengths (logical positions [0, len) are live).
+
+    Pages are streamed through online softmax in the order given by a
+    :class:`KVSchedule` over the gathered pages; sawtooth parity is driven
+    by ``cache_len`` so consecutive decode steps of one sequence reverse
+    direction (the tail pages of step t are the head pages of step t+1 —
+    the decode analogue of the paper's prefill reordering). The result is
+    traversal-order invariant, matching the contiguous oracle.
+
+    Fully-masked rows (len 0 — e.g. a free slot in a continuous-batching
+    pool) return exact zeros rather than NaN.
+    """
+    b, one, hq, d = q.shape
+    assert one == 1, "decode attention takes a single query position"
+    n_pages, page, hkv, _ = k_pool.shape
+    n_blocks = block_table.shape[1]
+    g = hq // hkv
+    scale_ = d ** -0.5 if scale is None else scale
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+
+    sched = KVSchedule(
+        order, n_q=1, n_kv=n_blocks, causal=False, q_block=1, kv_block=page
+    )
+    visit = sched.page_order(lens)  # (B, n_blocks) logical page ids
+    phys = jnp.take_along_axis(block_table.astype(jnp.int32), visit, axis=1)
+
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d) * scale_
+    offs = jnp.arange(page, dtype=jnp.int32)[None, :]
+
+    def body(carry, j):
+        m, l, acc = carry
+        logical = jax.lax.dynamic_index_in_dim(visit, j, axis=1, keepdims=False)
+        pid = jax.lax.dynamic_index_in_dim(phys, j, axis=1, keepdims=False)
+        k_j = k_pool[pid].astype(jnp.float32)  # (B, page, Hkv, D)
+        v_j = v_pool[pid].astype(jnp.float32)
+        pos = logical[:, None] * page + offs  # (B, page) absolute positions
+        valid = pos < lens[:, None]
+        if window is not None:
+            valid &= pos > (lens[:, None] - 1 - window)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_j)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.where(valid[:, None, None, :], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhgk,bkhd->bhgd", p, v_j)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, hkv, g), NEG_INF, jnp.float32),
+        jnp.zeros((b, hkv, g), jnp.float32),
+        jnp.zeros((b, hkv, g, d), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_blocks))
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (free slots)
+    o = acc / l[..., None]
     return o.reshape(b, 1, hq, d).astype(q.dtype)

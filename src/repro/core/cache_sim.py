@@ -21,13 +21,22 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Iterable, Iterator
+from typing import Iterable, Iterator, Sequence
 
 from repro.core import cache_model
 from repro.core.cache_model import AttentionWorkload, HWConfig
 from repro.core.schedule import Order, kv_index_host, num_kv_tiles_for
 
-__all__ = ["SimResult", "LRUCache", "simulate_trace", "attention_trace", "simulate_attention"]
+__all__ = [
+    "SimResult",
+    "LRUCache",
+    "simulate_trace",
+    "attention_trace",
+    "simulate_attention",
+    "reuse_distances",
+    "decode_page_trace",
+    "simulate_paged_decode",
+]
 
 
 @dataclasses.dataclass
@@ -148,6 +157,93 @@ def attention_trace(
                 positions[wk] += 1
                 if q_of(wk, positions[wk]) >= total_q:
                     active[wk] = False
+
+
+def reuse_distances(keys: Iterable[tuple]) -> list[int]:
+    """LRU stack distances of an access stream.
+
+    For each access, the number of *distinct* keys touched since the
+    previous access to the same key (0 = immediate re-touch). First-touch
+    (compulsory) accesses carry no distance and are skipped. A stream's
+    mean stack distance is the canonical locality figure: an LRU cache of
+    capacity C hits exactly the accesses with distance < C.
+    """
+    stack: list[tuple] = []  # most-recent-first
+    out: list[int] = []
+    for key in keys:
+        try:
+            i = stack.index(key)
+        except ValueError:
+            stack.insert(0, key)
+            continue
+        out.append(i)
+        del stack[i]
+        stack.insert(0, key)
+    return out
+
+
+def decode_page_trace(
+    order: Order | str,
+    lens: Sequence[int],
+    n_steps: int,
+    page: int,
+) -> Iterator[tuple]:
+    """Page-granular access trace of a paged continuous-batching decode.
+
+    Each decode step, every sequence streams all pages holding its current
+    KV (K and V of page p are distinct pool entries), visiting them in
+    schedule order with the *cache length* as the sawtooth parity driver —
+    exactly what ``paged_decode_attention`` / ``paged_flash_decode_fwd``
+    execute, so this trace is the measurement twin of the serving hot path.
+    Sawtooth makes consecutive steps reverse direction: the tail pages of
+    step t are re-touched first at t+1, halving the mean reuse distance vs
+    a cyclic traversal that always restarts at page 0.
+
+    Keys: ("K"|"V", seq, logical_page). Lengths grow by one per step.
+    """
+    order = Order.parse(order)
+    cur = [int(l) for l in lens]
+    for _ in range(n_steps):
+        for s, length in enumerate(cur):
+            n = max(1, -(-(length + 1) // page))  # incl. the token written now
+            for j in range(n):
+                # Parity matches the hot path exactly: the decode kernels are
+                # called with cache_len = length + 1 (the just-written token
+                # included), so that is the sawtooth driver here too.
+                p = kv_index_host(order, length + 1, j, n)
+                yield ("K", s, p)
+                yield ("V", s, p)
+            cur[s] = length + 1
+
+
+def simulate_paged_decode(
+    order: Order | str,
+    lens: Sequence[int],
+    n_steps: int,
+    page: int,
+    *,
+    capacity_pages: float | None = None,
+) -> dict:
+    """Replay a paged decode's page trace; report locality + LRU stats.
+
+    Returns mean/max reuse (stack) distance over the page stream and, when
+    ``capacity_pages`` is given, the LRU hit rate of a cache holding that
+    many page entries. The reuse-distance delta between cyclic and sawtooth
+    here is the serving-side analogue of the paper's prefill Fig. 8.
+    """
+    trace = list(decode_page_trace(order, lens, n_steps, page))
+    dists = reuse_distances(trace)
+    stats = {
+        "accesses": len(trace),
+        "mean_reuse_distance": (sum(dists) / len(dists)) if dists else 0.0,
+        "max_reuse_distance": max(dists, default=0),
+    }
+    if capacity_pages is not None:
+        res = simulate_trace(((k, 1.0) for k in trace), capacity_pages)
+        stats["hit_rate"] = res.hit_rate
+        stats["misses"] = res.misses
+        stats["cold_misses"] = res.cold_misses
+    return stats
 
 
 def simulate_attention(

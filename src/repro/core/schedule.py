@@ -35,6 +35,7 @@ __all__ = [
     "KVSchedule",
     "kv_index",
     "kv_index_host",
+    "page_visit_order",
     "tile_ids",
     "num_kv_tiles_for",
 ]
@@ -76,6 +77,24 @@ def kv_index_host(order: Order | str, i: int, j: int, n_kv: int) -> int:
     if order is Order.CYCLIC:
         return j
     return j if i % 2 == 0 else (n_kv - 1) - j
+
+
+def page_visit_order(order: Order | str, parity, n_kv: int) -> jax.Array:
+    """Vectorized :func:`kv_index`: full visit-order rows for a batch.
+
+    ``parity`` is a (B,)-shaped (or scalar) per-row parity driver — during
+    decode the natural driver is the current cache length, so consecutive
+    decode steps of one sequence alternate direction and the tail pages of
+    step ``t`` are revisited first at ``t+1`` (the decode analogue of the
+    paper's sawtooth win). Returns (B, n_kv) logical KV page indices in
+    visit order; traced inputs are fine.
+    """
+    order = Order.parse(order)
+    j = jnp.arange(n_kv, dtype=jnp.int32)[None, :]
+    p = jnp.atleast_1d(jnp.asarray(parity, jnp.int32))[:, None]
+    if order is Order.CYCLIC:
+        return jnp.broadcast_to(j, (p.shape[0], n_kv))
+    return jnp.where(p % 2 == 0, j, (n_kv - 1) - j)
 
 
 def num_kv_tiles_for(
@@ -139,6 +158,16 @@ class KVSchedule:
         n = self.kv_range(q_tile)
         idx = [kv_index_host(self.order, li, j, n) for j in range(n)]
         return idx
+
+    def page_order(self, parity) -> jax.Array:
+        """Visit order over this schedule's KV tiles for per-row ``parity``.
+
+        The paged-decode entry point: ``decode_attention`` builds a
+        ``KVSchedule`` over the gathered pages of a block table and walks
+        them in this order (sawtooth alternates per decode step, keyed on
+        the cache length). Traced ``parity`` is fine; returns (B, n_kv).
+        """
+        return page_visit_order(self.order, parity, self.n_kv)
 
     # ---- global traces (cache simulation) ------------------------------------
 

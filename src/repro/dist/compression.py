@@ -28,6 +28,8 @@ __all__ = [
     "BLOCK",
     "quantize_int8",
     "dequantize_int8",
+    "quantize_int8_vec",
+    "dequantize_int8_vec",
     "init_residuals",
     "reduce_grads_compressed",
 ]
@@ -57,6 +59,27 @@ def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
     """Inverse of :func:`quantize_int8`; ``shape`` trims the block padding."""
     flat = (q.astype(jnp.float32) * scale[..., None]).reshape(-1)
     return flat[: math.prod(shape)].reshape(shape).astype(dtype)
+
+
+def quantize_int8_vec(x: jax.Array):
+    """Structure-preserving symmetric int8 over the last axis.
+
+    ``x`` (..., D) -> (q (..., D) i8, scale (...,) f32), one scale per
+    trailing vector. This is the KV-cache variant (one scale per
+    token-head vector keeps the cache's logical shape, so sharding rules
+    and paged layouts apply unchanged); :func:`quantize_int8` is the
+    flat blockwise wire-format variant for collectives.
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8_vec(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`quantize_int8_vec`."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
 def init_residuals(grads):

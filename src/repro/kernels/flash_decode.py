@@ -5,11 +5,17 @@ streamed chunk-by-chunk with online softmax; per-batch valid lengths and
 sliding windows are carried by a precomputed (B, S_max) mask operand so the
 kernel needs no scalar plumbing.
 
-Sawtooth here alternates the chunk-scan direction across consecutive
-(batch·kv-head) grid rows. Unlike prefill there is no *intrinsic* KV reuse
-between rows (different heads/batches read different cache lines), so this
-is exposed for symmetry and measurement, not claimed as a win — see
-DESIGN.md §2 and kernels/traffic.py.
+In the contiguous layout, sawtooth alternates the chunk-scan direction
+across consecutive (batch·kv-head) grid rows. Unlike prefill there is no
+*intrinsic* KV reuse between rows (different heads/batches read different
+cache lines), so that toggle is exposed for symmetry and measurement, not
+claimed as a win — see DESIGN.md §2 and kernels/traffic.py.
+
+The *paged* layout (``paged_flash_decode_fwd``: shared page pools + per-row
+block tables, scalar-prefetched visit order) restores a real reuse axis:
+consecutive decode steps of one sequence re-walk the same pages, and
+sawtooth parity keyed on the cache length re-touches the tail pages first
+(DESIGN.md §8; reuse-distance deltas in core/cache_sim's page-trace mode).
 """
 
 from __future__ import annotations
@@ -31,10 +37,10 @@ except ImportError:  # pragma: no cover
     pltpu = None
     _CompilerParams = None
 
-from repro.core.schedule import Order
+from repro.core.schedule import Order, page_visit_order
 from repro.kernels.flash_attention import MASK_VALUE, LANES, _pad_axis
 
-__all__ = ["flash_decode_fwd"]
+__all__ = ["flash_decode_fwd", "paged_flash_decode_fwd"]
 
 
 def _chunk_index(order: Order, bh, c, n_chunks: int):
@@ -45,20 +51,8 @@ def _chunk_index(order: Order, bh, c, n_chunks: int):
     return c
 
 
-def _decode_kernel(
-    q_ref,  # (1, Gp, D)
-    k_ref,  # (1, ck, D)
-    v_ref,
-    mask_ref,  # (1, ck) f32 0/1
-    o_ref,  # (1, Gp, D)
-    m_scr,
-    l_scr,
-    acc_scr,
-    *,
-    n_chunks: int,
-    scale: float,
-):
-    c = pl.program_id(1)
+def _decode_step(q, k, v, ok, o_ref, m_scr, l_scr, acc_scr, *, c, n_chunks, scale):
+    """One online-softmax chunk: q (Gp, D), k/v (ck, D), ok (ck,) bool."""
 
     @pl.when(c == 0)
     def _init():
@@ -66,16 +60,12 @@ def _decode_kernel(
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0]
-    k = k_ref[0]
-    v = v_ref[0]
     s = (
         jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )
         * scale
     )  # (Gp, ck)
-    ok = mask_ref[0] > 0.0  # (ck,)
     s = jnp.where(ok[None, :], s, MASK_VALUE)
 
     m_prev = m_scr[:, :1]
@@ -98,10 +88,64 @@ def _decode_kernel(
         o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("order", "window", "scale", "chunk", "interpret"),
-)
+def _decode_kernel(
+    q_ref,  # (1, Gp, D)
+    k_ref,  # (1, ck, D)
+    v_ref,
+    mask_ref,  # (1, ck) f32 0/1
+    o_ref,  # (1, Gp, D)
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    n_chunks: int,
+    scale: float,
+):
+    _decode_step(
+        q_ref[0],
+        k_ref[0],
+        v_ref[0],
+        mask_ref[0] > 0.0,
+        o_ref,
+        m_scr,
+        l_scr,
+        acc_scr,
+        c=pl.program_id(1),
+        n_chunks=n_chunks,
+        scale=scale,
+    )
+
+
+def _paged_decode_kernel(
+    visit_ref,  # scalar prefetch: (B, n_blocks) physical page ids (unused here —
+    # consumed by the index maps; pallas passes it through to the body too)
+    q_ref,  # (1, Gp, D)
+    k_ref,  # (1, page, 1, D) one pool page, one kv head
+    v_ref,
+    mask_ref,  # (1, page) f32 0/1, already in visit order
+    o_ref,  # (1, Gp, D)
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    n_chunks: int,
+    scale: float,
+):
+    _decode_step(
+        q_ref[0],
+        k_ref[0, :, 0, :],
+        v_ref[0, :, 0, :],
+        mask_ref[0] > 0.0,
+        o_ref,
+        m_scr,
+        l_scr,
+        acc_scr,
+        c=pl.program_id(1),
+        n_chunks=n_chunks,
+        scale=scale,
+    )
+
+
 def flash_decode_fwd(
     q: jax.Array,
     k_cache: jax.Array,
@@ -113,9 +157,55 @@ def flash_decode_fwd(
     scale: Optional[float] = None,
     chunk: int = 512,
     interpret: bool = False,
+    block_table: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """q (B,1,Hq,D); caches (B,S_max,Hkv,D); cache_len scalar or (B,)."""
-    order = Order.parse(order)
+    """q (B,1,Hq,D); caches (B,S_max,Hkv,D); cache_len scalar or (B,).
+
+    With ``block_table`` (B, n_blocks), caches are shared page pools
+    (n_pages, page, Hkv, D) and the kernel visits each row's pages through
+    the block table in schedule order (see :func:`paged_flash_decode_fwd`).
+    """
+    if block_table is not None:
+        return paged_flash_decode_fwd(
+            q,
+            k_cache,
+            v_cache,
+            cache_len,
+            block_table,
+            order=order,
+            window=window,
+            scale=scale,
+            interpret=interpret,
+        )
+    return _flash_decode_contiguous(
+        q,
+        k_cache,
+        v_cache,
+        cache_len,
+        order=Order.parse(order),
+        window=window,
+        scale=scale,
+        chunk=chunk,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("order", "window", "scale", "chunk", "interpret"),
+)
+def _flash_decode_contiguous(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array | int,
+    *,
+    order: Order,
+    window: Optional[int],
+    scale: Optional[float],
+    chunk: int,
+    interpret: bool,
+) -> jax.Array:
     b, one, hq, d = q.shape
     assert one == 1, "decode kernel takes a single query position"
     _, s_max, hkv, _ = k_cache.shape
@@ -182,6 +272,104 @@ def flash_decode_fwd(
         interpret=interpret,
         **({"compiler_params": compiler_params} if compiler_params else {}),
     )(qf, kf, vf, mask)
+
+    out = out.reshape(b, hkv, g_pad, dp)[:, :, :g, :d]
+    return out.reshape(b, 1, hq, d)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("order", "window", "scale", "interpret"),
+)
+def paged_flash_decode_fwd(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    cache_len: jax.Array | int,
+    block_table: jax.Array,
+    *,
+    order: Order | str = Order.CYCLIC,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged decode: q (B,1,Hq,D); pools (n_pages, page, Hkv, D).
+
+    The schedule is folded into the operands before the kernel launches:
+    ``page_visit_order`` (sawtooth parity = cache_len, so consecutive decode
+    steps reverse direction) gives each row's logical visit order, the block
+    table maps it to physical pool pages, and that (B, n_blocks) physical id
+    array is the scalar-prefetch operand the KV ``index_map`` reads — the
+    classic TPU paged-attention pattern. The validity mask is pre-gathered
+    into the same visit order so mask chunk c always matches KV chunk c.
+    """
+    order = Order.parse(order)
+    b, one, hq, d = q.shape
+    assert one == 1, "decode kernel takes a single query position"
+    n_pages, page, hkv, _ = k_pool.shape
+    n_blocks = block_table.shape[1]
+    g = hq // hkv
+    scale_ = float(d**-0.5 if scale is None else scale)
+
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    visit = page_visit_order(order, lens, n_blocks)  # (B, n_blocks) logical
+    phys = jnp.take_along_axis(block_table.astype(jnp.int32), visit, axis=1)
+
+    # Validity mask per logical position, gathered into visit order.
+    pos = visit[:, :, None] * page + jnp.arange(page, dtype=jnp.int32)
+    ok = pos < lens[:, None, None]
+    if window is not None:
+        ok &= pos > (lens[:, None, None] - 1 - window)
+    mask = ok.reshape(b, n_blocks * page).astype(jnp.float32)
+
+    g_pad = max(8, g)
+    qf = q.reshape(b, hkv, g, d).reshape(b * hkv, g, d)
+    qf = _pad_axis(_pad_axis(qf, 1, g_pad), 2, LANES)
+    kf = _pad_axis(k_pool, 3, LANES)
+    vf = _pad_axis(v_pool, 3, LANES)
+    dp = kf.shape[3]
+
+    def q_map(bh, c, visit_ref):
+        return (bh, 0, 0)
+
+    def kv_map(bh, c, visit_ref):
+        return (visit_ref[bh // hkv, c], 0, bh % hkv, 0)
+
+    def mask_map(bh, c, visit_ref):
+        return (bh // hkv, c)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, n_chunks=n_blocks, scale=scale_
+    )
+    compiler_params = None
+    if _CompilerParams is not None and not interpret:
+        compiler_params = _CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hkv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, g_pad, dp), q_map),
+            pl.BlockSpec((1, page, 1, dp), kv_map),
+            pl.BlockSpec((1, page, 1, dp), kv_map),
+            pl.BlockSpec((1, page), mask_map),
+        ],
+        out_specs=pl.BlockSpec((1, g_pad, dp), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, LANES), jnp.float32),
+            pltpu.VMEM((g_pad, LANES), jnp.float32),
+            pltpu.VMEM((g_pad, dp), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, dp), q.dtype),
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )(phys, qf, kf, vf, mask)
 
     out = out.reshape(b, hkv, g_pad, dp)[:, :, :g, :d]
     return out.reshape(b, 1, hq, d)

@@ -152,8 +152,14 @@ def attention_decode(
     scale: Optional[float] = None,
     chunk: int = 512,
     impl: Impl = "auto",
+    block_table: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Single-token decode attention vs a KV cache. Not differentiated."""
+    """Single-token decode attention vs a KV cache. Not differentiated.
+
+    ``block_table`` switches both backends to the paged layout: caches are
+    shared (n_pages, page, Hkv, D) pools and pages are visited in schedule
+    order through the table (sawtooth parity keyed on ``cache_len``).
+    """
     order = Order.parse(order)
     impl = _resolve(impl)
     if impl in ("pallas", "pallas_interpret"):
@@ -167,10 +173,18 @@ def attention_decode(
             scale=scale,
             chunk=chunk,
             interpret=(impl == "pallas_interpret"),
+            block_table=block_table,
         )
     if impl in ("xla", "reference"):
         return core_attn.decode_attention(
-            q, k_cache, v_cache, cache_len, window=window, scale=scale
+            q,
+            k_cache,
+            v_cache,
+            cache_len,
+            window=window,
+            scale=scale,
+            block_table=block_table,
+            order=order,
         )
     raise ValueError(f"unknown decode impl: {impl!r}")
 

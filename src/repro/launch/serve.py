@@ -3,6 +3,10 @@ requests through the ServeEngine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
       --requests 16 --max-new 24
+
+``--scheduler continuous`` serves over the paged KV pool with continuous
+batching (token-only full-attention archs); ``auto`` picks it when the
+arch supports it and falls back to the static-group path otherwise.
 """
 
 from __future__ import annotations
@@ -15,8 +19,20 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, supports_continuous
 from repro.train.checkpoint import latest_step, restore_pytree
+
+
+def pick_scheduler(choice: str, cfg) -> str:
+    if choice != "auto":
+        return choice
+    ok = supports_continuous(cfg)
+    if not ok:
+        print(
+            f"scheduler=auto: {cfg.name} (family={cfg.family}, window={cfg.window}) "
+            "does not support continuous batching; using static groups"
+        )
+    return "continuous" if ok else "static"
 
 
 def main():
@@ -30,6 +46,10 @@ def main():
     ap.add_argument("--ckpt-dir", default=None, help="restore params from here")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--attn-order", default="sawtooth", choices=["cyclic", "sawtooth"])
+    ap.add_argument(
+        "--scheduler", default="auto", choices=["auto", "static", "continuous"]
+    )
+    ap.add_argument("--page-size", type=int, default=None, help="KV page rows")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -43,7 +63,14 @@ def main():
         params = state["params"]
         print(f"restored params from step {step}")
 
-    eng = ServeEngine(lm, params, batch_size=args.batch_size, max_len=args.max_len)
+    eng = ServeEngine(
+        lm,
+        params,
+        batch_size=args.batch_size,
+        max_len=args.max_len,
+        scheduler=pick_scheduler(args.scheduler, cfg),
+        page_size=args.page_size,
+    )
     rng = np.random.default_rng(0)
     reqs = [
         Request(

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.dist import compression
 from repro.dist.context import constrain
 from repro.kernels import ops
 from repro.models import layers as L
@@ -118,6 +119,12 @@ def attn_decode(
     b, one, _ = x.shape
     hd = cfg.hd
     q = L.dense(p["wq"], x, dtype=dt).reshape(b, 1, cfg.n_heads, hd)
+    if not cross and "k_pages" in cache:
+        k = L.dense(p["wk"], x, dtype=dt).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = L.dense(p["wv"], x, dtype=dt).reshape(b, 1, cfg.n_kv_heads, hd)
+        o, cache = _attn_decode_paged(cfg, cache, q, k, v)
+        out = L.dense(p["wo"], o.reshape(b, 1, -1), dtype=dt)
+        return out, cache
     if not cross:
         pos = cache["len"]
         k = L.dense(p["wk"], x, dtype=dt).reshape(b, 1, cfg.n_kv_heads, hd)
@@ -147,17 +154,61 @@ def attn_decode(
     return out, cache
 
 
+def _attn_decode_paged(cfg: ModelConfig, cache: dict, q, k, v):
+    """One-token decode against a paged cache: per-row lengths, block-table
+    page write, schedule-ordered paged attention. Rows whose ``len`` is 0
+    (free continuous-batching slots) write into whatever page their block
+    table points at — the serving pool points free rows at a reserved dummy
+    page — and read back exact zeros."""
+    b = q.shape[0]
+    lens = cache["len"]  # (B,)
+    bt = cache["block_table"]
+    page = cache["k_pages"].shape[1]
+    bpr = bt.shape[1]
+    capacity = bpr * page
+
+    positions = lens[:, None]  # (B, 1) per-row absolute positions
+    q = L.rope(q, positions, theta=cfg.rope_theta)
+    k = L.rope(k, positions, theta=cfg.rope_theta)
+
+    write_pos = jnp.minimum(lens, capacity - 1)  # clamp like the contiguous path
+    page_log = write_pos // page
+    offset = write_pos % page
+    phys = jnp.take_along_axis(bt, page_log[:, None], axis=1)[:, 0]
+
+    cache = dict(cache)
+    for name, val in (("k_pages", k), ("v_pages", v)):
+        vec = val[:, 0]  # (B, Hkv, hd)
+        if cfg.kv_cache_dtype == "int8":
+            qv, sc = _quantize_kv(vec)
+            cache[name] = cache[name].at[phys, offset].set(qv)
+            cache[name + "_scale"] = cache[name + "_scale"].at[phys, offset].set(sc)
+        else:
+            cache[name] = cache[name].at[phys, offset].set(
+                vec.astype(cache[name].dtype)
+            )
+    cache["len"] = lens + 1
+
+    valid = jnp.minimum(lens + 1, capacity)
+    o = ops.attention_decode(
+        q,
+        _cache_read(cfg, cache, "k_pages"),
+        _cache_read(cfg, cache, "v_pages"),
+        valid,
+        order=cfg.attn_order,
+        impl=cfg.attn_impl,
+        block_table=bt,
+    )
+    return o, cache
+
+
 def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Per-(token, head)-vector symmetric int8. x (B,S,H,D) -> (q, scale)."""
-    xf = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0  # (B,S,H)
-    scale = jnp.where(scale == 0.0, 1.0, scale)
-    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
+    return compression.quantize_int8_vec(x)
 
 
 def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
-    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+    return compression.dequantize_int8_vec(q, scale, dtype)
 
 
 def _cache_read(cfg: ModelConfig, cache: dict, name: str) -> jax.Array:
@@ -166,9 +217,51 @@ def _cache_read(cfg: ModelConfig, cache: dict, name: str) -> jax.Array:
     return cache[name]
 
 
+def page_geometry(cfg: ModelConfig, max_len: int) -> tuple[int, int]:
+    """(page rows, blocks-per-sequence) for a paged cache of ``max_len``.
+
+    Page size defaults to ``kv_block`` so physical pages coincide with the
+    KV tiles the schedule walks — a block-table entry is then exactly one
+    schedule step (DESIGN.md §8).
+    """
+    page = cfg.page_size or cfg.kv_block
+    page = max(1, min(page, max_len))
+    return page, -(-max_len // page)
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, dtype=None) -> dict:
     """Self-attention KV cache; SWA archs get a window-sized ring buffer.
-    kv_cache_dtype='int8' stores quantized values + per-vector scales."""
+    kv_cache_dtype='int8' stores quantized values + per-vector scales.
+
+    ``cfg.kv_layout == 'paged'`` switches to a page-pool layout: k/v pages
+    (n_pages, page, Hkv, hd) plus a per-row ``block_table`` (B, n_blocks)
+    initialized to the identity mapping (row i owns pages [i*n, (i+1)*n)),
+    and per-row ``len`` (B,). A serving pool (repro.serve.kv_pool) re-maps
+    block tables as sequences join and leave the running batch.
+    """
+    if cfg.kv_layout == "paged":
+        if cfg.window is not None:
+            raise ValueError(
+                "paged KV layout requires full attention; sliding-window "
+                "archs keep the ring-buffer layout (kv_layout='contiguous')"
+            )
+        page, bpr = page_geometry(cfg, max_len)
+        shape = (batch * bpr, page, cfg.n_kv_heads, cfg.hd)
+        cache = {
+            "len": jnp.zeros((batch,), jnp.int32),
+            "block_table": jnp.arange(batch * bpr, dtype=jnp.int32).reshape(
+                batch, bpr
+            ),
+        }
+        if cfg.kv_cache_dtype == "int8":
+            for name in ("k_pages", "v_pages"):
+                cache[name] = jnp.zeros(shape, jnp.int8)
+                cache[name + "_scale"] = jnp.ones(shape[:3], jnp.float32)
+        else:
+            dt = dtype or cfg.activation_dtype()
+            cache["k_pages"] = jnp.zeros(shape, dt)
+            cache["v_pages"] = jnp.zeros(shape, dt)
+        return cache
     size = min(max_len, cfg.window) if cfg.window is not None else max_len
     shape = (batch, size, cfg.n_kv_heads, cfg.hd)
     cache = {"len": jnp.zeros((), jnp.int32)}
@@ -200,7 +293,14 @@ def _cache_write(cfg: ModelConfig, cache: dict, name: str, val: jax.Array, pos) 
 
 
 def fill_cache(cfg: ModelConfig, cache: dict, k: jax.Array, v: jax.Array) -> dict:
-    """Write prefill K/V into a fresh cache (handles SWA truncation)."""
+    """Write prefill K/V into a fresh cache (handles SWA truncation).
+
+    Paged caches must come straight from :func:`init_cache` (identity block
+    table): row i's logical pages are then physically contiguous, so the
+    prefill scatter is a reshape.
+    """
+    if "k_pages" in cache:
+        return _fill_cache_paged(cfg, cache, k, v)
     s = k.shape[1]
     size = cache["k"].shape[1]
     if s >= size:
@@ -219,6 +319,28 @@ def fill_cache(cfg: ModelConfig, cache: dict, k: jax.Array, v: jax.Array) -> dic
     cache = _cache_write(cfg, cache, "v", v, 0)
     cache["len"] = jnp.asarray(s, jnp.int32)
     return cache
+
+
+def _fill_cache_paged(cfg: ModelConfig, cache: dict, k: jax.Array, v: jax.Array) -> dict:
+    b, s = k.shape[:2]
+    n_pages, page, h, d = cache["k_pages"].shape
+    bpr = cache["block_table"].shape[1]
+    capacity = bpr * page
+    if s > capacity:
+        k, v = k[:, -capacity:], v[:, -capacity:]
+        s = capacity
+    out = dict(cache)
+    for name, val in (("k_pages", k), ("v_pages", v)):
+        val = jnp.pad(val, ((0, 0), (0, capacity - s), (0, 0), (0, 0)))
+        pages = val.reshape(b * bpr, page, h, d)
+        if cfg.kv_cache_dtype == "int8":
+            qv, sc = _quantize_kv(pages)
+            out[name] = qv
+            out[name + "_scale"] = sc
+        else:
+            out[name] = pages.astype(cache[name].dtype)
+    out["len"] = jnp.full((b,), s, jnp.int32)
+    return out
 
 
 # --------------------------------------------------------------------------

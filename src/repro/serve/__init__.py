@@ -1,3 +1,21 @@
-from repro.serve.engine import GenerationResult, Request, ServeEngine
+from repro.serve.engine import (
+    CONTINUOUS_FAMILIES,
+    GenerationResult,
+    Request,
+    ServeEngine,
+    supports_continuous,
+)
+from repro.serve.kv_pool import PagedKVPool, PagePool
+from repro.serve.scheduler import ContinuousScheduler, Slot
 
-__all__ = ["GenerationResult", "Request", "ServeEngine"]
+__all__ = [
+    "CONTINUOUS_FAMILIES",
+    "GenerationResult",
+    "Request",
+    "ServeEngine",
+    "supports_continuous",
+    "PagedKVPool",
+    "PagePool",
+    "ContinuousScheduler",
+    "Slot",
+]

@@ -1,10 +1,29 @@
 """Batched serving engine: prefill + decode over the unified LM API.
 
-Static-batch continuous-ish serving: requests are grouped into fixed-size
-batches (padding short prompts on the left so all rows share one prefill
-length bucket), prefilled once, then decoded token-by-token with greedy or
-temperature sampling until EOS/max_new_tokens. KV caches, SWA ring buffers
-and SSM states all live behind ``lm.prefill/decode_step``.
+Two schedulers (``repro.serve.scheduler``):
+
+* ``scheduler="static"`` — the original fixed-group path: requests are
+  grouped into ``batch_size`` batches (left-padded into one shared prefill
+  bucket), prefilled once, decoded token-by-token until every row hits its
+  own EOS / ``max_new_tokens``. Works for every model family (KV caches,
+  SWA ring buffers and SSM states all live behind ``lm.prefill /
+  decode_step``).
+
+* ``scheduler="continuous"`` — continuous batching over a shared paged KV
+  pool (``repro.serve.kv_pool``): each request owns a slot in a persistent
+  decode batch and a block-table row in the pool; requests are admitted the
+  moment a slot plus enough pages free up (mid-decode, honoring per-request
+  ``arrival`` times) and retire individually, so short requests never idle
+  behind long ones. Decode visits the pool's pages in the paper's
+  ``KVSchedule`` order (sawtooth parity driven by each row's cache length).
+  Requires a token-only full-attention family (dense / moe).
+
+Sampling is per-row in both paths: each request is sampled with its own
+temperature and a PRNG stream folded from (engine seed, request seed —
+defaulting to the submission index so identical requests decorrelate —
+per-request sample index). A greedy request batched next to a sampling
+request stays greedy, and a request's sampled stream does not depend on
+which slot or group it landed in.
 
 On TPU the decode step uses the Pallas flash-decode kernel with the
 schedule from the paper's technique; on CPU it uses the jnp path.
@@ -22,11 +41,29 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.dist import sharding as shd
-from repro.models.model import LM
+from repro.models.model import LM, build_model
+from repro.serve.kv_pool import PagedKVPool, assemble_cache_view
+from repro.serve.scheduler import ContinuousScheduler
 
-__all__ = ["Request", "GenerationResult", "ServeEngine"]
+__all__ = [
+    "Request",
+    "GenerationResult",
+    "ServeEngine",
+    "CONTINUOUS_FAMILIES",
+    "supports_continuous",
+]
 
-EOS = 1
+EOS = 1  # legacy default, kept for callers that import it; engines use cfg.eos_id
+
+CONTINUOUS_FAMILIES = ("dense", "moe")
+
+
+def supports_continuous(cfg: ModelConfig) -> bool:
+    """Whether ``cfg`` can serve under the continuous scheduler: a
+    token-only full-attention family (the paged pool has no ring-buffer or
+    recurrent-state layout). The single eligibility predicate — launchers
+    and examples picking a scheduler automatically must use this."""
+    return cfg.family in CONTINUOUS_FAMILIES and cfg.window is None
 
 
 @dataclasses.dataclass
@@ -35,6 +72,11 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0      # 0 = greedy
     rid: int = 0
+    seed: Optional[int] = None    # sampling stream id; defaults to the
+                                  # request's submission index so identical
+                                  # requests sample independently
+    eos_id: Optional[int] = None  # overrides ModelConfig.eos_id
+    arrival: int = 0              # decode-step arrival time (continuous only)
 
 
 @dataclasses.dataclass
@@ -42,6 +84,34 @@ class GenerationResult:
     rid: int
     tokens: np.ndarray            # generated tokens (without prompt)
     steps: int
+
+
+@jax.jit
+def _row_keys(base: jax.Array, seeds: jax.Array, counts: jax.Array) -> jax.Array:
+    """One PRNG key per row: fold (request seed, sample index) into base."""
+    return jax.vmap(
+        lambda s, c: jax.random.fold_in(jax.random.fold_in(base, s), c)
+    )(seeds, counts)
+
+
+@jax.jit
+def _sample_rows(logits: jax.Array, temps: jax.Array, keys: jax.Array) -> jax.Array:
+    """Per-row sampling: greedy where temp<=0, else categorical at that
+    row's own temperature with that row's own key."""
+    greedy = jnp.argmax(logits, axis=-1)
+    sampled = jax.vmap(
+        lambda l, t, k: jax.random.categorical(k, l / jnp.maximum(t, 1e-6))
+    )(logits, temps, keys)
+    return jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32)
+
+
+def _bucket_len(n: int, cap: int, page: int) -> int:
+    """Prefill bucket: the prompt rounded up to whole pages, capped at the
+    cache capacity. Page-multiple buckets keep the per-request capacity
+    clamp tight (a pow2 bucket near cap would eat the decode budget) and
+    match the pool's allocation granularity; the distinct-bucket count —
+    i.e. prefill compilations — is bounded by blocks-per-sequence."""
+    return min(max(page, -(-n // page) * page), cap)
 
 
 class ServeEngine:
@@ -55,12 +125,33 @@ class ServeEngine:
         seed: int = 0,
         mesh=None,
         pcfg: Optional[ParallelConfig] = None,
+        scheduler: str = "static",
+        page_size: Optional[int] = None,
     ):
         """Pass ``mesh`` (+ optional ParallelConfig) for sharded serving:
         params are placed on their TP/FSDP shardings and every step runs
-        under the mesh context (GSPMD propagates cache/batch shardings)."""
+        under the mesh context (GSPMD propagates cache/batch shardings).
+
+        ``scheduler="continuous"`` rebuilds the model under the paged KV
+        layout (``page_size`` pages, default ``kv_block``) and serves with
+        continuous batching; ``"static"`` keeps the fixed-group path."""
+        if scheduler not in ("static", "continuous"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
+        if scheduler == "continuous":
+            cfg = lm.cfg
+            if not supports_continuous(cfg):
+                raise ValueError(
+                    "continuous scheduling needs a token-only full-attention "
+                    f"family {CONTINUOUS_FAMILIES} (got family={cfg.family!r}, "
+                    f"window={cfg.window}); use scheduler='static'"
+                )
+            page = min(page_size or cfg.page_size or cfg.kv_block, max_len)
+            lm = build_model(cfg.with_(kv_layout="paged", page_size=page))
+            self._page = page
+        self.scheduler = scheduler
         self.lm = lm
         self.mesh = mesh
+        self.eos = lm.cfg.eos_id
         # Cache capacity model, shared by validation here and the budgeting
         # in _generate_batch: prefill writes bucket + prefix tokens (VLM
         # prepends prefix embeddings) and decode writes max_new - 1 more
@@ -91,14 +182,28 @@ class ServeEngine:
         self.key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(lambda p, b: lm.prefill(p, b, max_len))
         self._decode = jax.jit(lm.decode_step)
+        self._prefill_buckets: dict[int, object] = {}
 
     def _mesh_ctx(self):
         return (
             jax.set_mesh(self.mesh) if self.mesh is not None else contextlib.nullcontext()
         )
 
+    def _eos_for(self, r: Request) -> int:
+        return self.eos if r.eos_id is None else r.eos_id
+
+    def _seed_for(self, r: Request, idx: int) -> int:
+        """Effective sampling-stream id: explicit seed, else the request's
+        submission index (distinct by construction, so N identical
+        temperature>0 requests in one call return N independent samples)."""
+        return idx if r.seed is None else r.seed
+
     def _pad_batch(
-        self, prompts: Sequence[np.ndarray], max_bucket: Optional[int] = None
+        self,
+        prompts: Sequence[np.ndarray],
+        max_bucket: Optional[int] = None,
+        batch: Optional[int] = None,
+        bucket: Optional[int] = None,
     ) -> jnp.ndarray:
         # Shared prefill bucket. Bounded (full-attention) caches cap it at
         # the cache capacity: an overlong prompt keeps only its most recent
@@ -106,23 +211,29 @@ class ServeEngine:
         # silently overflowing the prefill bucket and then clamp-overwriting
         # the cache's last slot every decode step. max_bucket=None (SSM
         # state, SWA ring buffers) leaves prompts untouched.
-        length = max(1, max(len(p) for p in prompts))  # all-empty -> 1 EOS pad
+        length = bucket or max(1, max(len(p) for p in prompts))  # all-empty -> 1 pad
         if max_bucket is not None:
             length = min(length, max_bucket)
-        out = np.full((self.batch_size, length), EOS, np.int32)
+        out = np.full((batch or self.batch_size, length), self.eos, np.int32)
         for i, p in enumerate(prompts):
             p = p[-length:]
             out[i, length - len(p) :] = p  # left-pad into a shared bucket
         return jnp.asarray(out)
 
     def generate(self, requests: Sequence[Request]) -> list[GenerationResult]:
+        if self.scheduler == "continuous":
+            return self._generate_continuous(requests)
         results: list[GenerationResult] = []
         for i in range(0, len(requests), self.batch_size):
             group = list(requests[i : i + self.batch_size])
-            results.extend(self._generate_batch(group))
+            results.extend(self._generate_batch(group, base_idx=i))
         return results
 
-    def _generate_batch(self, group: Sequence[Request]) -> list[GenerationResult]:
+    # ---- static path ---------------------------------------------------------
+
+    def _generate_batch(
+        self, group: Sequence[Request], base_idx: int = 0
+    ) -> list[GenerationResult]:
         # Prompts get priority for the bounded capacity (see __init__ for
         # the capacity model); a request whose max_new_tokens exceeds what
         # remains after the shared bucket is clamped (visible via .steps),
@@ -158,31 +269,188 @@ class ServeEngine:
         generated = np.zeros((len(group), max_new), np.int32)
         done = np.asarray([lim == 0 for lim in new_limits])  # 0-limit rows emit nothing
         steps = np.zeros(len(group), np.int32)
+        eos_for = [self._eos_for(r) for r in group]
+        # logits carry batch_size rows (padding rows included) — size the
+        # per-row sampling params to match.
+        temps_np = np.zeros((tokens.shape[0],), np.float32)
+        seeds_np = np.zeros((tokens.shape[0],), np.int32)
+        for j, r in enumerate(group):
+            temps_np[j] = r.temperature
+            seeds_np[j] = self._seed_for(r, base_idx + j)
+        temps = jnp.asarray(temps_np)
+        seeds = jnp.asarray(seeds_np)
 
-        cur = self._sample(logits[:, -1], group)
+        cur = self._sample(logits[:, -1], temps, seeds, 0)
         for t in range(max_new):
             for j in range(len(group)):
                 if not done[j]:
                     generated[j, t] = int(cur[j, 0])
                     steps[j] = t + 1
-                    if int(cur[j, 0]) == EOS or t + 1 >= new_limits[j]:
+                    if int(cur[j, 0]) == eos_for[j] or t + 1 >= new_limits[j]:
                         done[j] = True
             if done.all():
                 break
             with self._mesh_ctx():
                 logits, caches = self._decode(self.params, cur, caches)
-            cur = self._sample(logits[:, -1], group)
+            cur = self._sample(logits[:, -1], temps, seeds, t + 1)
 
         return [
             GenerationResult(rid=r.rid, tokens=generated[j, : steps[j]], steps=int(steps[j]))
             for j, r in enumerate(group)
         ]
 
-    def _sample(self, logits: jax.Array, group) -> jnp.ndarray:
-        temp = max((r.temperature for r in group), default=0.0)
-        if temp <= 0.0:
-            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / temp, axis=-1)[:, None].astype(
-            jnp.int32
-        )
+    def _sample(self, logits: jax.Array, temps, seeds, count: int) -> jnp.ndarray:
+        counts = jnp.full(seeds.shape, count, jnp.int32)
+        keys = _row_keys(self.key, seeds, counts)
+        return _sample_rows(logits, temps, keys)[:, None]
+
+    # ---- continuous path -----------------------------------------------------
+    #
+    # The decode loop runs one fused jitted step per token: assemble the
+    # cache view (pages + block tables + lens), decode, sample per-row —
+    # a single dispatch, so the scheduler's fewer-steps win is not eaten
+    # by per-step host overhead. Admission is likewise one fused
+    # prefill+sample call per request (cached per prompt bucket).
+
+    def _prefill_for(self, bucket: int):
+        fn = self._prefill_buckets.get(bucket)
+        if fn is None:
+            lm, base = self.lm, self.key
+
+            def prefill_sample(params, batch, temp, seed, _n=bucket):
+                logits, caches = lm.prefill(params, batch, _n)
+                key = _row_keys(base, seed, jnp.zeros((1,), jnp.int32))
+                tok = _sample_rows(logits[:, -1], temp, key)
+                return tok, caches
+
+            fn = jax.jit(prefill_sample)
+            self._prefill_buckets[bucket] = fn
+        return fn
+
+    def _cont_step_fn(self):
+        if getattr(self, "_cont_step", None) is None:
+            lm, base = self.lm, self.key
+            n_layers = lm.cfg.n_layers
+
+            def step(params, cur, pages, bt, lens, temps, seeds, counts):
+                caches = assemble_cache_view(pages, bt, lens, n_layers)
+                logits, caches = lm.decode_step(params, cur, caches)
+                keys = _row_keys(base, seeds, counts)
+                toks = _sample_rows(logits[:, -1], temps, keys)
+                return toks, {name: caches[name] for name in pages}
+
+            self._cont_step = jax.jit(step)
+        return self._cont_step
+
+    def _generate_continuous(
+        self, requests: Sequence[Request]
+    ) -> list[GenerationResult]:
+        cfg = self.lm.cfg
+        n_slots = self.batch_size
+        cap = self._cap
+        sched = ContinuousScheduler(n_slots)
+        sched.submit(list(requests))
+        idx_of = {id(r): i for i, r in enumerate(requests)}  # default seeds
+        pool = PagedKVPool(cfg, cfg.n_layers, n_slots, cap)
+
+        results: dict[int, GenerationResult] = {}
+        cur = np.full((n_slots, 1), self.eos, np.int32)
+        temps = np.zeros((n_slots,), np.float32)
+        seeds = np.zeros((n_slots,), np.int32)
+        counts = np.zeros((n_slots,), np.int32)
+
+        def finish(slot: int) -> None:
+            st = sched.retire(slot)
+            pool.release(slot)
+            cur[slot, 0] = self.eos
+            temps[slot] = 0.0
+            r = st.request
+            results[id(r)] = GenerationResult(
+                rid=r.rid,
+                tokens=np.asarray(st.generated, np.int32),
+                steps=len(st.generated),
+            )
+
+        step = 0
+        while sched.has_work():
+            # Admission: fill free slots with arrived requests while the
+            # pool can reserve their worst case.
+            while (slot := sched.free_slot()) is not None:
+                req = sched.pop_admissible(step)
+                if req is None:
+                    break
+                if not self._admit(
+                    req, slot, sched, pool, cur, temps, seeds, counts, idx_of[id(req)]
+                ):
+                    sched.requeue(req)  # no pages yet; retry after retirements
+                    break
+                if sched.slots[slot].done:  # first token was already terminal
+                    finish(slot)
+
+            active = sched.active_slots()
+            if not active:
+                if sched.waiting:
+                    nxt = sched.next_arrival()
+                    step = max(step + 1, nxt if nxt is not None else step + 1)
+                    continue
+                break
+
+            for slot in active:
+                pool.ensure_writable(slot)
+            with self._mesh_ctx():
+                toks_dev, pages = self._cont_step_fn()(
+                    self.params,
+                    jnp.asarray(cur),
+                    pool.pages,
+                    pool.block_tables,
+                    pool.lens,
+                    temps,
+                    seeds,
+                    counts,
+                )
+            pool.update_pages(pages)
+            toks = np.asarray(toks_dev)
+            step += 1
+            for slot in active:
+                st = sched.slots[slot]
+                pool.advance(slot)
+                counts[slot] += 1
+                tok = int(toks[slot])
+                cur[slot, 0] = tok
+                if st.record(tok):
+                    finish(slot)
+
+        return [results[id(r)] for r in requests]
+
+    def _admit(
+        self, req: Request, slot: int, sched, pool, cur, temps, seeds, counts, idx: int
+    ) -> bool:
+        """Prefill ``req`` into ``slot``; False if the pool lacks pages."""
+        cap = self._cap
+        prompt = np.asarray(req.tokens, np.int32)[-cap:]
+        bucket = _bucket_len(max(1, len(prompt)), cap, self._page)
+        new_limit = max(0, min(req.max_new_tokens, cap - bucket + 1))
+        if new_limit == 0:
+            # Nothing to emit — resolve without consuming pages.
+            st = sched.place(slot, req, eos_id=self._eos_for(req), new_limit=0)
+            st.done = True
+            return True
+        if not pool.can_admit(bucket, new_limit):
+            return False
+        tokens = self._pad_batch([prompt], batch=1, bucket=bucket)
+        with self._mesh_ctx():
+            tok_dev, caches = self._prefill_for(bucket)(
+                self.params,
+                {"tokens": tokens},
+                jnp.asarray([req.temperature], jnp.float32),
+                jnp.asarray([self._seed_for(req, idx)], jnp.int32),
+            )
+        pool.insert(slot, caches, bucket, new_limit)
+        st = sched.place(slot, req, eos_id=self._eos_for(req), new_limit=new_limit)
+        temps[slot] = req.temperature
+        seeds[slot] = self._seed_for(req, idx)
+        tok = int(np.asarray(tok_dev)[0])
+        counts[slot] = 1
+        cur[slot, 0] = tok
+        st.record(tok)
+        return True

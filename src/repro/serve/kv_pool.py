@@ -1,0 +1,208 @@
+"""Shared paged KV pool for continuous-batching serving.
+
+One physical page pool per layer (stacked on a leading L axis, matching the
+scanned cache pytrees the models produce) is shared by every running
+sequence; each decode slot owns a *block table* row mapping its logical
+pages to physical pool pages. Page size equals the schedule's ``kv_block``
+(see ``transformer.page_geometry``), so a block-table entry is exactly one
+KV tile of the paper's traversal schedule and the decode kernels walk the
+table in ``KVSchedule`` order (DESIGN.md §8).
+
+Page 0 is a reserved dummy: free slots point their block tables at it, so
+the (fixed-shape, whole-batch) decode step can write the masked-out token
+of an empty slot somewhere harmless.
+
+Allocation is lazy (a sequence holds pages for the tokens it has, growing
+one page at a time as decode crosses page boundaries) with worst-case
+admission reservation: a request is admitted only if the pool can cover its
+prompt bucket plus its full ``max_new_tokens`` on top of every running
+sequence's outstanding reservation — so ``grow`` never fails mid-flight and
+no preemption machinery is needed. int8 pools (``kv_cache_dtype='int8'``)
+carry the per-vector scales from ``repro.dist.compression`` as parallel
+page arrays and halve the pool's HBM footprint.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+__all__ = ["PagePool", "PagedKVPool", "assemble_cache_view"]
+
+
+def assemble_cache_view(pages: dict, block_table, lens, n_layers: int) -> dict:
+    """Splice block tables + lengths into a page pytree for ``decode_step``.
+
+    Block tables and lengths are tiled across the layer axis because the
+    scanned decode carries one copy per layer (a few KB — uniformity with
+    the contiguous cache pytree is worth more than the bytes). Traceable:
+    the engine calls this inside its fused jitted decode step.
+    """
+    view = dict(pages)
+    bt = jnp.asarray(block_table)
+    ln = jnp.asarray(lens)
+    view["block_table"] = jnp.broadcast_to(bt, (n_layers,) + bt.shape)
+    view["len"] = jnp.broadcast_to(ln, (n_layers,) + ln.shape)
+    return view
+
+
+class PagePool:
+    """Host-side free-list allocator over physical page ids.
+
+    Page 0 is never handed out (reserved dummy). ``reserved`` tracks pages
+    promised to admitted-but-not-yet-written sequences; ``available`` is
+    what a new admission may claim.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(f"pool needs >= 2 pages (1 dummy), got {n_pages}")
+        self.n_pages = n_pages
+        self._free: list[int] = list(range(n_pages - 1, 0, -1))  # pop() -> low ids
+        self.reserved = 0
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def available(self) -> int:
+        return self.free_count - self.reserved
+
+    def alloc(self, n: int) -> list[int]:
+        if n > self.free_count:
+            raise RuntimeError(f"page pool exhausted: want {n}, free {self.free_count}")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, ids) -> None:
+        self._free.extend(int(i) for i in ids)
+
+
+@jax.jit
+def _scatter_pages(dst: jax.Array, src: jax.Array, ids: jax.Array) -> jax.Array:
+    """dst (L, P, ...) <- src (L, n, ...) at physical pages ``ids`` (n,)."""
+    return dst.at[:, ids].set(src.astype(dst.dtype))
+
+
+class PagedKVPool:
+    """Device page pool + host block tables / lengths / reservations.
+
+    The device side is a dict of stacked leaves shaped like the per-layer
+    paged caches from ``transformer.init_cache`` with a leading layer axis,
+    which is exactly what ``stack_decode`` scans — ``caches_view()`` splices
+    the host block tables and lengths in, and ``update_pages()`` takes the
+    written pages back after a decode step.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        n_layers: int,
+        n_slots: int,
+        max_len: int,
+        *,
+        dtype=None,
+    ):
+        if cfg.window is not None:
+            raise ValueError("paged KV pools require full attention (window=None)")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.page, self.blocks_per_seq = T.page_geometry(cfg, max_len)
+        self.capacity = self.blocks_per_seq * self.page
+        n_pages = n_slots * self.blocks_per_seq + 1  # +1 reserved dummy page 0
+        self.alloc = PagePool(n_pages)
+
+        shape = (n_layers, n_pages, self.page, cfg.n_kv_heads, cfg.hd)
+        self.pages: dict[str, jax.Array] = {}
+        if cfg.kv_cache_dtype == "int8":
+            for name in ("k_pages", "v_pages"):
+                self.pages[name] = jnp.zeros(shape, jnp.int8)
+                self.pages[name + "_scale"] = jnp.ones(shape[:4], jnp.float32)
+        else:
+            dt = dtype or cfg.activation_dtype()
+            for name in ("k_pages", "v_pages"):
+                self.pages[name] = jnp.zeros(shape, dt)
+
+        self.block_tables = np.zeros((n_slots, self.blocks_per_seq), np.int32)
+        self.lens = np.zeros((n_slots,), np.int32)
+        self._slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
+        self._slot_worst: list[int] = [0] * n_slots
+
+    # ---- admission / lifecycle ----------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page)
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        worst = self.pages_for(min(prompt_len + max_new, self.capacity))
+        return self.alloc.available >= worst
+
+    def insert(self, slot: int, caches, prompt_len: int, max_new: int) -> None:
+        """Adopt a freshly prefilled B=1 paged cache pytree into ``slot``.
+
+        ``caches`` comes from ``lm.prefill`` under the paged config with
+        ``max_len == prompt bucket``: page leaves are (L, n_src, page, H, D)
+        in identity order, so copying rows [0, pages_for(prompt_len)) into
+        newly allocated physical pages is the whole insertion.
+        """
+        if self._slot_pages[slot]:
+            raise RuntimeError(f"slot {slot} is occupied")
+        n = self.pages_for(prompt_len)
+        worst = self.pages_for(min(prompt_len + max_new, self.capacity))
+        ids = self.alloc.alloc(n)
+        self.alloc.reserved += worst - n
+        self._slot_worst[slot] = worst
+        self._slot_pages[slot] = ids
+        idx = jnp.asarray(ids, jnp.int32)
+        for name in self.pages:
+            self.pages[name] = _scatter_pages(
+                self.pages[name], caches[name][:, :n], idx
+            )
+        self.block_tables[slot] = 0
+        self.block_tables[slot, :n] = ids
+        self.lens[slot] = min(prompt_len, self.capacity)
+
+    def ensure_writable(self, slot: int) -> None:
+        """Grow ``slot`` by one page if the next decode write needs it.
+
+        Covered by the admission reservation, so allocation cannot fail for
+        a slot within its worst-case budget.
+        """
+        owned = self._slot_pages[slot]
+        if self.lens[slot] >= len(owned) * self.page and len(owned) < self.blocks_per_seq:
+            (pid,) = self.alloc.alloc(1)
+            self.alloc.reserved -= 1
+            owned.append(pid)
+            self.block_tables[slot, len(owned) - 1] = pid
+
+    def advance(self, slot: int) -> None:
+        """Record one decoded token (host mirror of the device len+1)."""
+        self.lens[slot] = min(self.lens[slot] + 1, self.capacity)
+
+    def release(self, slot: int) -> None:
+        ids = self._slot_pages[slot]
+        self.alloc.free(ids)
+        self.alloc.reserved -= self._slot_worst[slot] - len(ids)
+        self._slot_pages[slot] = []
+        self._slot_worst[slot] = 0
+        self.block_tables[slot] = 0
+        self.lens[slot] = 0
+
+    # ---- decode-step plumbing ------------------------------------------------
+
+    def caches_view(self) -> dict:
+        """Cache pytree for ``decode_step``: pages + current tables/lens
+        (host-authoritative), via :func:`assemble_cache_view`."""
+        n_layers = next(iter(self.pages.values())).shape[0]
+        return assemble_cache_view(
+            self.pages, self.block_tables, self.lens, n_layers
+        )
+
+    def update_pages(self, caches: dict) -> None:
+        """Take back the page leaves written by a decode step."""
+        for name in self.pages:
+            self.pages[name] = caches[name]

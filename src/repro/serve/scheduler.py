@@ -1,0 +1,99 @@
+"""Request schedulers: static groups vs continuous batching.
+
+The static scheduler reproduces the original engine behavior — requests are
+chopped into fixed ``batch_size`` groups and each group runs prefill + decode
+to completion before the next starts (a short request parked next to a long
+one holds its slot doing nothing).
+
+The continuous scheduler gives each request a *slot* in a persistent decode
+batch: requests are admitted the moment a slot and enough KV pages are free
+(including mid-decode), and retire individually on their own EOS /
+``max_new_tokens``, freeing the slot for the next waiting request. Admission
+is FIFO in arrival order, gated on the paged pool's worst-case reservation
+(`kv_pool.PagedKVPool.can_admit`), so a running sequence can never be
+starved of pages by a later admission. ``Request.arrival`` (a decode-step
+timestamp, used by the serve benchmark to model staggered traffic) holds a
+request out of the queue until the engine's step counter reaches it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+__all__ = ["Slot", "ContinuousScheduler"]
+
+
+@dataclasses.dataclass
+class Slot:
+    """One running sequence in the continuous batch."""
+
+    request: object                   # serve.engine.Request
+    eos_id: int
+    new_limit: int                    # clamped max_new_tokens
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    def record(self, token: int) -> bool:
+        """Append a token; returns True when the sequence is finished."""
+        self.generated.append(token)
+        if token == self.eos_id or len(self.generated) >= self.new_limit:
+            self.done = True
+        return self.done
+
+
+class ContinuousScheduler:
+    """Admission queue + slot lifecycle for continuous batching."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.waiting: list = []
+        self.slots: list[Optional[Slot]] = [None] * n_slots
+
+    def submit(self, requests: Sequence) -> None:
+        self.waiting.extend(requests)
+        # FIFO in arrival order; python's stable sort keeps submission order
+        # within one arrival step.
+        self.waiting.sort(key=lambda r: getattr(r, "arrival", 0))
+
+    # ---- queries -------------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def next_arrival(self) -> Optional[int]:
+        return getattr(self.waiting[0], "arrival", 0) if self.waiting else None
+
+    def pop_admissible(self, step: int) -> Optional[object]:
+        """Next waiting request whose arrival time has passed, if any."""
+        if self.waiting and getattr(self.waiting[0], "arrival", 0) <= step:
+            return self.waiting.pop(0)
+        return None
+
+    def requeue(self, request) -> None:
+        """Put an admissible-but-unplaceable request back at the queue head
+        (no pages free yet — admission stays FIFO, no overtaking)."""
+        self.waiting.insert(0, request)
+
+    # ---- lifecycle -----------------------------------------------------------
+
+    def place(self, slot: int, request, *, eos_id: int, new_limit: int) -> Slot:
+        assert self.slots[slot] is None, f"slot {slot} occupied"
+        st = Slot(request=request, eos_id=eos_id, new_limit=new_limit)
+        self.slots[slot] = st
+        return st
+
+    def retire(self, slot: int) -> Slot:
+        st = self.slots[slot]
+        assert st is not None
+        self.slots[slot] = None
+        return st

@@ -130,3 +130,26 @@ def test_wavefront_trace_length_order_invariant(causal, n_workers):
         na = sorted(t[2] for t in a if t[1] == tensor)
         nb = sorted(t[2] for t in b if t[1] == tensor)
         assert na == nb, tensor
+
+
+def test_page_visit_order_matches_kv_index():
+    import numpy as np
+
+    from repro.core.schedule import KVSchedule, kv_index_host, page_visit_order
+
+    n = 5
+    for order in ("cyclic", "sawtooth"):
+        got = np.asarray(page_visit_order(order, np.arange(4), n))
+        want = np.asarray(
+            [[kv_index_host(order, p, j, n) for j in range(n)] for p in range(4)]
+        )
+        np.testing.assert_array_equal(got, want)
+    # KVSchedule.page_order is the same arithmetic behind the schedule object
+    sched = KVSchedule("sawtooth", n_q=1, n_kv=n)
+    np.testing.assert_array_equal(
+        np.asarray(sched.page_order(np.arange(4))),
+        np.asarray(page_visit_order("sawtooth", np.arange(4), n)),
+    )
+    # odd parity reverses, even is forward
+    row = np.asarray(page_visit_order("sawtooth", np.asarray([1]), n))[0]
+    np.testing.assert_array_equal(row, np.arange(n)[::-1])

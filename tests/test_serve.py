@@ -4,7 +4,14 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import Request, ServeEngine
+from repro.serve import PagedKVPool, PagePool, Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def deepseek_lm():
+    cfg = get_config("deepseek-7b").reduced()
+    lm = build_model(cfg)
+    return lm, lm.init(jax.random.PRNGKey(0))
 
 
 @pytest.mark.parametrize("arch", ["deepseek-7b", "mixtral-8x7b", "mamba2-130m"])
@@ -46,3 +53,151 @@ def test_temperature_sampling_runs():
     prompt = np.arange(2, 10, dtype=np.int32)
     out = eng.generate([Request(tokens=prompt, max_new_tokens=6, temperature=1.0)])[0]
     assert out.steps >= 1
+
+
+@pytest.mark.parametrize("scheduler", ["static", "continuous"])
+def test_greedy_row_unaffected_by_sampling_neighbor(deepseek_lm, scheduler):
+    """Per-row sampling: a temperature=0 request batched with a hot request
+    must produce the same tokens as when served alone (the old engine took
+    max(temperature) over the batch)."""
+    lm, params = deepseek_lm
+    eng = ServeEngine(
+        lm, params, batch_size=2, max_len=64, scheduler=scheduler, page_size=16
+    )
+    # Same prompt length: the static path shares one prefill bucket, and a
+    # longer neighbor would change the greedy row's left-padding (a separate
+    # effect from sampling).
+    greedy = lambda: Request(tokens=np.arange(2, 10, dtype=np.int32), max_new_tokens=6, rid=0)
+    hot = Request(
+        tokens=np.arange(3, 11, dtype=np.int32), max_new_tokens=6, temperature=1.5, rid=1
+    )
+    solo = eng.generate([greedy()])[0]
+    paired = eng.generate([greedy(), hot])[0]
+    np.testing.assert_array_equal(solo.tokens, paired.tokens)
+
+
+@pytest.mark.parametrize("scheduler", ["static", "continuous"])
+def test_identical_sampling_requests_decorrelate(deepseek_lm, scheduler):
+    """Default seeds fall back to the submission index: N copies of the same
+    temperature>0 request must not return N identical streams."""
+    lm, params = deepseek_lm
+    eng = ServeEngine(
+        lm, params, batch_size=4, max_len=64, scheduler=scheduler, page_size=16
+    )
+    mk = lambda: Request(
+        tokens=np.arange(2, 10, dtype=np.int32), max_new_tokens=8, temperature=1.5
+    )
+    res = eng.generate([mk() for _ in range(4)])
+    streams = {tuple(r.tokens.tolist()) for r in res}
+    assert len(streams) > 1, streams
+
+
+# ---- continuous batching ----------------------------------------------------
+
+
+def test_continuous_engine_serves_stream(deepseek_lm):
+    lm, params = deepseek_lm
+    eng = ServeEngine(
+        lm, params, batch_size=4, max_len=96, scheduler="continuous", page_size=16
+    )
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(
+            tokens=rng.integers(2, lm.cfg.vocab, size=4 + 3 * i).astype(np.int32),
+            max_new_tokens=5,
+            rid=i,
+            arrival=i // 3,  # staggered arrival: slots refill mid-decode
+        )
+        for i in range(9)  # more requests than slots
+    ]
+    res = eng.generate(reqs)
+    assert [r.rid for r in res] == list(range(9))  # input order preserved
+    assert all(1 <= r.steps <= 5 for r in res)
+    assert all(len(r.tokens) == r.steps for r in res)
+
+
+def test_continuous_matches_static_solo_greedy(deepseek_lm):
+    """A single greedy request sees no batch neighbors in either scheduler,
+    and per-request bucketing matches when the prompt fills the bucket —
+    the decode streams must then agree token-for-token."""
+    lm, params = deepseek_lm
+    prompt = np.arange(2, 18, dtype=np.int32)  # len 16 == its power-of-2 bucket
+    a = ServeEngine(lm, params, batch_size=1, max_len=64).generate(
+        [Request(tokens=prompt, max_new_tokens=6)]
+    )[0]
+    b = ServeEngine(
+        lm, params, batch_size=1, max_len=64, scheduler="continuous", page_size=16
+    ).generate([Request(tokens=prompt, max_new_tokens=6)])[0]
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_continuous_eos_override_truncates(deepseek_lm):
+    """Request.eos_id: re-serving with eos_id set to the greedy stream's
+    second token must stop the generation right there."""
+    lm, params = deepseek_lm
+    eng = ServeEngine(
+        lm, params, batch_size=2, max_len=64, scheduler="continuous", page_size=16
+    )
+    prompt = np.arange(2, 10, dtype=np.int32)
+    base = eng.generate([Request(tokens=prompt, max_new_tokens=6)])[0]
+    assert base.steps >= 2, "need at least two tokens to test truncation"
+    stop_at = int(base.tokens[1])
+    expect = int(np.flatnonzero(base.tokens == stop_at)[0]) + 1  # first hit
+    cut = eng.generate(
+        [Request(tokens=prompt, max_new_tokens=6, eos_id=stop_at)]
+    )[0]
+    assert cut.steps == expect
+    np.testing.assert_array_equal(cut.tokens, base.tokens[:expect])
+
+
+def test_continuous_rejects_unsupported_family():
+    cfg = get_config("mixtral-8x7b").reduced()  # SWA window
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="continuous"):
+        ServeEngine(lm, params, batch_size=2, max_len=64, scheduler="continuous")
+
+
+def test_engine_eos_follows_model_config(deepseek_lm):
+    lm, params = deepseek_lm
+    lm7 = build_model(lm.cfg.with_(eos_id=7))
+    eng = ServeEngine(lm7, params, batch_size=2, max_len=64)
+    assert eng.eos == 7
+
+
+# ---- pool bookkeeping -------------------------------------------------------
+
+
+def test_page_pool_alloc_free_reserve():
+    pool = PagePool(8)  # pages 1..7 allocatable (0 = dummy)
+    assert pool.free_count == 7
+    ids = pool.alloc(3)
+    assert 0 not in ids and len(set(ids)) == 3
+    pool.reserved = 4
+    assert pool.available == 0
+    pool.free(ids)
+    pool.reserved = 0
+    assert pool.free_count == 7
+    with pytest.raises(RuntimeError):
+        pool.alloc(8)
+
+
+def test_paged_kv_pool_lifecycle(deepseek_lm):
+    lm, _ = deepseek_lm
+    cfg = lm.cfg.with_(kv_layout="paged", page_size=16)
+    lmp = build_model(cfg)
+    params = lmp.init(jax.random.PRNGKey(0))
+    pool = PagedKVPool(cfg, cfg.n_layers, n_slots=2, max_len=64)
+    assert pool.alloc.free_count == 2 * 4  # 4 pages per slot, dummy excluded
+    assert pool.can_admit(16, 8)
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab)
+    _, caches = jax.jit(lambda p, b: lmp.prefill(p, b, 16))(params, {"tokens": toks})
+    pool.insert(0, caches, prompt_len=16, max_new=8)
+    assert pool.lens[0] == 16 and pool.block_tables[0, 0] != 0
+    assert pool.alloc.reserved == 1  # 16+8 tokens -> 2 pages worst, 1 held
+    pool.ensure_writable(0)  # len 16 == 1 page * 16 -> grows by one page
+    assert pool.alloc.reserved == 0 and pool.block_tables[0, 1] != 0
+    pool.release(0)
+    assert pool.alloc.free_count == 8 and pool.alloc.reserved == 0
+    assert pool.lens[0] == 0 and not pool.block_tables[0].any()
