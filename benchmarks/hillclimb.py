@@ -15,6 +15,18 @@ Selected pairs (from the 33-cell baseline table):
 Usage: PYTHONPATH=src python -m benchmarks.hillclimb [--only PAIR]
 (must run in its own process: imports repro.launch.dryrun which forces the
 512-device XLA flag).
+
+Backward block autotune (``--autotune-bwd``): since the fused flash
+backward, bwd tile sizes are independent knobs (ModelConfig.bwd_q_block /
+bwd_kv_block). The objective is a jitted train-microstep — value_and_grad
+of an attention-dominated loss, i.e. fwd + fused bwd wall time — measured
+over a (bwd_q_block × bwd_kv_block) grid with the forward blocks held at
+the config's tuned values. Writes artifacts/hillclimb/bwd_autotune_*.json
+and prints the winner. Runs on whatever backend jax finds (CPU here; on
+TPU the same sweep times the real kernels via impl='pallas').
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --autotune-bwd deepseek-7b \\
+      --seq 1024 --impl xla
 """
 
 from __future__ import annotations
@@ -145,11 +157,114 @@ def _apply_cfg_overrides(arch, ov):
     return ov
 
 
+def autotune_bwd(arch: str, *, seq: int, batch: int, impl: str, reps: int,
+                 blocks=(128, 256, 512)):
+    """Grid-search bwd_q_block × bwd_kv_block on a jitted train-microstep.
+
+    The microstep is value_and_grad of sum(attention(q,k,v)^2) at the
+    arch's head geometry — fwd + fused bwd of the kernel under tune, no
+    model overhead diluting the signal. Forward blocks stay at the config
+    values so only the backward tiles move.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.kernels import ops
+
+    cfg = get_config(arch)
+    hd = cfg.hd
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    q = jax.random.normal(jax.random.PRNGKey(1), (batch, seq, hq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (batch, seq, hkv, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (batch, seq, hkv, hd), jnp.float32)
+
+    def microstep_time(bq, bk):
+        def loss(q, k, v):
+            out = ops.attention(
+                q, k, v,
+                order=cfg.attn_order,
+                causal=True,
+                window=cfg.window,
+                q_block=cfg.q_block,
+                kv_block=cfg.kv_block,
+                impl=impl,
+                score_dtype=cfg.score_dtype,
+                bwd_q_block=bq,
+                bwd_kv_block=bk,
+            )
+            return (out.astype(jnp.float32) ** 2).sum()
+
+        fn = jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
+        jax.block_until_ready(fn(q, k, v))  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(q, k, v))
+        return (time.perf_counter() - t0) / reps
+
+    results = []
+    for bq in blocks:
+        for bk in blocks:
+            s = microstep_time(bq, bk)
+            results.append({"bwd_q_block": bq, "bwd_kv_block": bk, "step_s": s})
+            print(f"[autotune-bwd {arch}] bq={bq} bk={bk} step_s={s:.4f}")
+    best = min(results, key=lambda r: r["step_s"])
+
+    def closest(val):  # the grid point standing in for "inherit fwd blocks"
+        return min(blocks, key=lambda b: abs(b - val))
+
+    base = next(
+        r for r in results
+        if r["bwd_q_block"] == closest(cfg.q_block)
+        and r["bwd_kv_block"] == closest(cfg.kv_block)
+    )
+    rec = {
+        "arch": arch,
+        "seq": seq,
+        "batch": batch,
+        "impl": impl,
+        "backend": jax.default_backend(),
+        "fwd_blocks": [cfg.q_block, cfg.kv_block],
+        "grid": results,
+        "best": best,
+        "speedup_vs_fwd_blocks": base["step_s"] / best["step_s"],
+    }
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, f"bwd_autotune_{arch.replace('/', '_')}_s{seq}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(
+        f"[autotune-bwd {arch}] best bwd_q_block={best['bwd_q_block']} "
+        f"bwd_kv_block={best['bwd_kv_block']} step_s={best['step_s']:.4f} "
+        f"({rec['speedup_vs_fwd_blocks']:.3f}x vs fwd-block default) -> {path}"
+    )
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(EXPERIMENTS))
     ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--autotune-bwd", default=None, metavar="ARCH",
+                    help="grid-search backward block sizes on a jitted "
+                    "train-microstep for ARCH, then exit")
+    ap.add_argument("--seq", type=int, default=1024)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--impl", default="xla",
+                    choices=["auto", "pallas", "pallas_interpret", "xla"])
+    ap.add_argument("--reps", type=int, default=3)
     args = ap.parse_args()
+
+    if args.autotune_bwd:
+        # no dryrun import: keep the real device count (the 512-device flag
+        # would shard the microstep and poison the timing)
+        autotune_bwd(
+            args.autotune_bwd, seq=args.seq, batch=args.batch,
+            impl=args.impl, reps=args.reps,
+        )
+        return
 
     from repro.launch.dryrun import extrapolate_cell  # sets 512-dev flag
     from repro.launch.mesh import make_production_mesh

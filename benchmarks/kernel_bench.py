@@ -1,23 +1,40 @@
 """Kernel-level benchmarks (TPU-native view of the paper's technique).
 
-1. Pallas flash kernel correctness-timed in interpret mode (CPU executes the
-   kernel body; wall time is NOT TPU time — correctness + relative cost only).
+1. Pallas flash kernels (fwd and the fused bwd) correctness-timed in
+   interpret mode (CPU executes the kernel body; wall time is NOT TPU time —
+   correctness + relative cost only).
 2. HBM->VMEM traffic under Pallas pipeline-elision semantics: cyclic vs
-   sawtooth, the structural TPU analogue of the paper's L2 saving.
+   sawtooth on the forward grid AND the backward (dQ / transposed dK/dV)
+   grids, the structural TPU analogue of the paper's L2 saving.
 3. XLA-path blockwise attention wall time on CPU, cyclic vs sawtooth
-   (order-invariance: times should match; the schedule is free).
+   (order-invariance: times should match; the schedule is free), plus the
+   fused-backward vs recompute-VJP train-microstep comparison.
+
+``python benchmarks/kernel_bench.py [--quick] [--json BENCH_kernels.json]``
+writes the rows as a JSON artifact so CI tracks the kernel perf trajectory
+alongside BENCH_serve.json; ``benchmarks/run.py`` still consumes ``run()``.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
+
+sys.path.insert(0, "src")  # allow running from repo root without installation
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.attention import flash_attention
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.traffic import FlashGridSpec, pipeline_traffic
+from repro.kernels.traffic import (
+    FlashGridSpec,
+    bwd_dkv_llc_model,
+    bwd_dkv_traffic,
+    pipeline_traffic,
+)
 
 
 def _mk(shape, seed, dtype=jnp.float32):
@@ -25,7 +42,7 @@ def _mk(shape, seed, dtype=jnp.float32):
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))  # one warmup call, block the whole pytree
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
@@ -46,6 +63,60 @@ def bench_pallas_interpret():
     return rows
 
 
+def bench_pallas_bwd_interpret():
+    """Fused Pallas backward (delta + dQ + dK/dV kernels), interpret mode."""
+    from repro.kernels.flash_attention import flash_attention_bwd
+
+    rows = []
+    q, k, v = _mk((1, 256, 2, 64), 1), _mk((1, 256, 2, 64), 2), _mk((1, 256, 2, 64), 3)
+    do = _mk((1, 256, 2, 64), 4)
+    for order in ("cyclic", "sawtooth"):
+        o, lse = flash_attention_fwd(
+            q, k, v, order=order, causal=True, q_block=128, kv_block=128,
+            interpret=True, return_lse=True,
+        )
+        fn = jax.jit(
+            lambda q, k, v, o, lse, do, ord_=order: flash_attention_bwd(
+                q, k, v, o, lse, do, order=ord_, causal=True,
+                q_block=128, kv_block=128, interpret=True,
+            )
+        )
+        us = _time(fn, q, k, v, o, lse, do)
+        rows.append((f"pallas_flash_bwd_interpret_{order}", us, "s256_h2_d64"))
+    return rows
+
+
+def bench_fused_bwd_vs_recompute():
+    """Train-microstep (fwd+bwd) on the XLA path: fused bwd vs recompute-VJP.
+
+    The fused path replaces the recompute's extra attention-equivalent pass
+    with the standard 2-pass backward; on CPU the wall-clock delta is the
+    observable proxy for the 3-pass -> 2-pass conversion.
+    """
+    from repro.kernels import ops
+
+    rows = []
+    q, k, v = _mk((2, 1024, 4, 64), 1), _mk((2, 1024, 2, 64), 2), _mk((2, 1024, 2, 64), 3)
+    times = {}
+    for impl in ("xla", "jnp"):
+        fn = jax.jit(
+            jax.grad(
+                lambda q, k, v, i=impl: (
+                    ops.attention(q, k, v, causal=True, impl=i,
+                                  q_block=256, kv_block=256) ** 2
+                ).sum(),
+                argnums=(0, 1, 2),
+            )
+        )
+        times[impl] = _time(fn, q, k, v, reps=5)
+        tag = "fused" if impl == "xla" else "recompute"
+        rows.append((f"microstep_bwd_{tag}", times[impl], "s1024_h4_d64_cpu"))
+    rows.append(
+        ("microstep_fused_speedup", 0.0, f"{times['jnp'] / times['xla']:.3f}x")
+    )
+    return rows
+
+
 def bench_traffic_model():
     rows = []
     cases = [
@@ -63,6 +134,31 @@ def bench_traffic_model():
         rows.append(
             (f"tpu_traffic_{name}", us,
              f"kv_fetch_red={red:.2f}%|elided={saw.elided_kv_fetches}/{saw.total_kv_fetches}")
+        )
+    return rows
+
+
+def bench_bwd_traffic_model():
+    """Backward (dK/dV transposed grid) traffic: pipeline elision + LLC model."""
+    rows = []
+    cases = [
+        ("train4k", FlashGridSpec(seq_q=4096, seq_kv=4096, q_block=512, kv_block=512, causal=True)),
+        ("prefill32k", FlashGridSpec(seq_q=32768, seq_kv=32768, q_block=512, kv_block=512, causal=True)),
+        ("gqa8k", FlashGridSpec(seq_q=8192, seq_kv=8192, q_block=256, kv_block=256, n_groups=4)),
+    ]
+    for name, spec in cases:
+        t0 = time.perf_counter()
+        cyc = bwd_dkv_traffic(spec, "cyclic")
+        saw = bwd_dkv_traffic(spec, "sawtooth")
+        llc_c = bwd_dkv_llc_model(spec, "cyclic", n_workers=1)
+        llc_s = bwd_dkv_llc_model(spec, "sawtooth", n_workers=1)
+        us = (time.perf_counter() - t0) * 1e6
+        pipe_red = 100 * (1 - saw.stream_bytes / cyc.stream_bytes)
+        llc_red = 100 * (1 - llc_s.non_compulsory_misses / max(llc_c.non_compulsory_misses, 1))
+        rows.append(
+            (f"tpu_bwd_dkv_traffic_{name}", us,
+             f"stream_red={pipe_red:.2f}%|llc_miss_red={llc_red:.1f}%"
+             f"|elided={saw.elided_stream_fetches}/{saw.total_stream_fetches}")
         )
     return rows
 
@@ -121,10 +217,48 @@ def bench_ssd_backward_sawtooth():
     ]
 
 
-def run():
+def run(quick: bool = False):
     rows = []
     rows += bench_pallas_interpret()
+    rows += bench_pallas_bwd_interpret()
     rows += bench_traffic_model()
+    rows += bench_bwd_traffic_model()
     rows += bench_xla_order_invariance()
+    if not quick:
+        rows += bench_fused_bwd_vs_recompute()
     rows += bench_ssd_backward_sawtooth()
     return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the s1024 microstep comparison (CI smoke)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows to a JSON artifact (e.g. BENCH_kernels.json)")
+    args = ap.parse_args()
+    t0 = time.time()
+    rows = run(quick=args.quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {
+                    "bench": "kernels",
+                    "quick": args.quick,
+                    "wall_s": round(time.time() - t0, 2),
+                    "rows": [
+                        {"name": n, "us_per_call": round(us, 1), "derived": d}
+                        for n, us, d in rows
+                    ],
+                },
+                f,
+                indent=1,
+            )
+        print(f"wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

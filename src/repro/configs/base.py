@@ -71,10 +71,18 @@ class ModelConfig:
     # execution
     dtype: str = "bfloat16"                  # activation/compute dtype
     param_dtype: str = "float32"
-    attn_impl: str = "auto"
+    attn_impl: str = "auto"                  # auto | pallas | pallas_interpret
+                                             # | xla (fused blockwise bwd)
+                                             # | jnp (recompute-VJP fallback)
+                                             # | reference
     attn_order: str = "sawtooth"             # the paper's technique, on by default
     q_block: int = 512
     kv_block: int = 512
+    bwd_q_block: Optional[int] = None        # fused-backward kernel tiles;
+    bwd_kv_block: Optional[int] = None       # None = inherit q_block/kv_block
+                                             # (autotuned separately — the bwd
+                                             # working set is larger; see
+                                             # benchmarks/hillclimb.py)
     remat: str = "full"                      # none | full | dots
     score_dtype: str = "float32"             # attention score/probs dtype in
                                              # the blockwise XLA path (bf16

@@ -1,6 +1,13 @@
 """Core: the paper's contribution — sawtooth KV scheduling + cache analysis."""
 
-from repro.core.schedule import KVSchedule, Order, kv_index, kv_index_host
+from repro.core.schedule import (
+    BwdKVSchedule,
+    KVSchedule,
+    Order,
+    bwd_kv_schedule,
+    kv_index,
+    kv_index_host,
+)
 from repro.core.cache_model import (
     GB10,
     TPU_V5E_DMA,
@@ -8,11 +15,18 @@ from repro.core.cache_model import (
     HWConfig,
 )
 from repro.core.cache_sim import SimResult, simulate_attention, simulate_trace
-from repro.core.attention import decode_attention, flash_attention, mha_reference
+from repro.core.attention import (
+    decode_attention,
+    flash_attention,
+    flash_attention_bwd,
+    mha_reference,
+)
 
 __all__ = [
+    "BwdKVSchedule",
     "KVSchedule",
     "Order",
+    "bwd_kv_schedule",
     "kv_index",
     "kv_index_host",
     "GB10",
@@ -24,5 +38,6 @@ __all__ = [
     "simulate_trace",
     "decode_attention",
     "flash_attention",
+    "flash_attention_bwd",
     "mha_reference",
 ]

@@ -22,9 +22,34 @@ import numpy as np
 
 from repro.core.schedule import KVSchedule, Order, kv_index
 
-__all__ = ["mha_reference", "flash_attention", "decode_attention", "paged_decode_attention"]
+__all__ = [
+    "mha_reference",
+    "flash_attention",
+    "flash_attention_bwd",
+    "decode_attention",
+    "paged_decode_attention",
+]
 
 NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _valid_mask(
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    kv_len: int,
+) -> jax.Array:
+    """Boolean (len(rows), len(cols)) visibility mask for global indices."""
+    m = cols < kv_len  # mask out kv padding
+    if causal:
+        m &= cols[None, :] <= rows[:, None]
+    if window is not None:
+        m &= cols[None, :] > rows[:, None] - window
+    if not causal and window is None:
+        m = jnp.broadcast_to(m[None, :], (rows.shape[0], cols.shape[0]))
+    return m
 
 
 def _mask_bias(
@@ -36,13 +61,7 @@ def _mask_bias(
     kv_len: int,
 ) -> jax.Array:
     """Additive mask bias (0 or -inf) for global row/col index grids."""
-    m = cols < kv_len  # mask out kv padding
-    if causal:
-        m &= cols[None, :] <= rows[:, None]
-    if window is not None:
-        m &= cols[None, :] > rows[:, None] - window
-    if not causal and window is None:
-        m = jnp.broadcast_to(m[None, :], (rows.shape[0], cols.shape[0]))
+    m = _valid_mask(rows, cols, causal=causal, window=window, kv_len=kv_len)
     return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
 
 
@@ -93,6 +112,7 @@ def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
         "kv_block",
         "scale",
         "score_dtype",
+        "return_lse",
     ),
 )
 def flash_attention(
@@ -107,6 +127,7 @@ def flash_attention(
     kv_block: int = 128,
     scale: Optional[float] = None,
     score_dtype: str = "float32",
+    return_lse: bool = False,
 ) -> jax.Array:
     """Blockwise online-softmax attention, KV traversed in schedule order.
 
@@ -114,6 +135,11 @@ def flash_attention(
     with the KV visit order given by Alg. 4 when ``order == 'sawtooth'``.
     Q blocks are independent (vmapped — the 'parallel for' of Alg. 1); the
     KV stream is a ``lax.scan`` so the lowered HLO stays small at any S.
+
+    ``return_lse=True`` additionally returns the per-row log-sum-exp of the
+    *scaled* scores, shape (B, Sq, Hq) f32 — the residual the fused flash
+    backward (:func:`flash_attention_bwd`) consumes instead of recomputing
+    the forward. Fully-masked (padding) rows report ``NEG_INF``-scale lse.
     """
     order = Order.parse(order)
     sdt = jnp.dtype(score_dtype)
@@ -185,14 +211,175 @@ def flash_attention(
             jnp.zeros((b, hkv, g, q_block, d), jnp.float32),
         )
         (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(nkv))
+        lse = m + jnp.log(jnp.where(l == 0.0, 1.0, l))
         l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (padding)
-        return acc / l[..., None]
+        return acc / l[..., None], lse
 
-    out = jax.vmap(one_q_block, in_axes=(0, 3), out_axes=3)(
+    out, lse = jax.vmap(one_q_block, in_axes=(0, 3), out_axes=(3, 3))(
         jnp.arange(nq), qb_
-    )  # (B, Hkv, G, nq, qb, D)
+    )  # (B, Hkv, G, nq, qb, D), (B, Hkv, G, nq, qb)
     out = out.transpose(0, 3, 4, 1, 2, 5).reshape(b, sq_p, hq, d)
-    return out[:, :sq].astype(q.dtype)
+    out = out[:, :sq].astype(q.dtype)
+    if not return_lse:
+        return out
+    lse = lse.transpose(0, 3, 4, 1, 2).reshape(b, sq_p, hq)[:, :sq]
+    return out, lse
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "order",
+        "causal",
+        "window",
+        "q_block",
+        "kv_block",
+        "scale",
+        "score_dtype",
+    ),
+)
+def flash_attention_bwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    o: jax.Array,
+    lse: jax.Array,
+    do: jax.Array,
+    *,
+    order: Order | str = Order.CYCLIC,
+    causal: bool = False,
+    window: Optional[int] = None,
+    q_block: int = 128,
+    kv_block: int = 128,
+    scale: Optional[float] = None,
+    score_dtype: str = "float32",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused blockwise flash backward from saved ``(o, lse)`` residuals.
+
+    The FlashAttention-2 two-pass structure, without re-running the forward:
+
+      delta = rowsum(dO * O)                      (per-row, f32)
+      dQ pass: Q tile resident, KV tiles streamed in schedule order
+               (the forward grid), accumulating dQ += scale * dS @ K
+      dK/dV pass: KV tile resident, Q/dO tiles streamed in the *transposed*
+               schedule order (parity keyed on the KV-tile counter — see
+               ``core.schedule.BwdKVSchedule``), accumulating
+               dV += P^T @ dO and dK += scale * dS^T @ Q
+
+    with P = exp(S - lse) recovered from the saved log-sum-exp (already
+    normalized — no second softmax reduction) and dS = P * (dP - delta).
+    Out-of-range tiles contribute exact zeros through the mask, so both
+    passes scan the full tile range (the Pallas kernels trim instead).
+    ``score_dtype`` drops the two score-shaped einsums to bf16 like the
+    forward; softmax recovery and accumulation stay f32.
+    """
+    order = Order.parse(order)
+    sdt = jnp.dtype(score_dtype)
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale_ = d ** -0.5 if scale is None else scale
+
+    q_block = min(q_block, max(sq, 1))
+    kv_block = min(kv_block, max(skv, 1))
+
+    delta = (do.astype(jnp.float32) * o.astype(jnp.float32)).sum(-1)  # (B,Sq,Hq)
+
+    qp = _pad_to(q, 1, q_block)
+    dop = _pad_to(do, 1, q_block)
+    lsep = _pad_to(lse.astype(jnp.float32), 1, q_block)
+    deltap = _pad_to(delta, 1, q_block)
+    kp = _pad_to(k, 1, kv_block)
+    vp = _pad_to(v, 1, kv_block)
+    sq_p, skv_p = qp.shape[1], kp.shape[1]
+    nq, nkv = sq_p // q_block, skv_p // kv_block
+
+    def fold_q(x):  # (B, Sq, Hq[, D]) -> (B, Hkv, G, nq, qb[, D])
+        tail = x.shape[3:]
+        x = x.reshape((b, nq, q_block, hkv, g) + tail)
+        perm = (0, 3, 4, 1, 2) + tuple(range(5, x.ndim))
+        return x.transpose(perm)
+
+    qb_ = fold_q(qp.astype(jnp.float32))
+    dob_ = fold_q(dop.astype(jnp.float32))
+    lseb = fold_q(lsep)
+    deltab = fold_q(deltap)
+    kb_ = kp.astype(jnp.float32).reshape(b, nkv, kv_block, hkv, d).transpose(0, 3, 1, 2, 4)
+    vb_ = vp.astype(jnp.float32).reshape(b, nkv, kv_block, hkv, d).transpose(0, 3, 1, 2, 4)
+
+    rows = jnp.arange(q_block)
+    cols = jnp.arange(kv_block)
+
+    def _p_ds(q_t, do_t, lse_t, delta_t, k_j, v_j, ok):
+        """Shared tile math: normalized probs P and score grad dS."""
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", q_t.astype(sdt), k_j.astype(sdt),
+            preferred_element_type=sdt,
+        ).astype(jnp.float32) * scale_
+        p = jnp.where(ok, jnp.exp(s - lse_t[..., None]), 0.0)
+        dp = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", do_t.astype(sdt), v_j.astype(sdt),
+            preferred_element_type=sdt,
+        ).astype(jnp.float32)
+        ds = p * (dp - delta_t[..., None])
+        return p, ds
+
+    # ---- dQ pass: forward grid (Q resident, KV streamed) ---------------------
+    def dq_block(i, q_t, do_t, lse_t, delta_t):
+        def body(acc, j):
+            kv_j = kv_index(order, i, j, nkv)
+            k_j = jax.lax.dynamic_index_in_dim(kb_, kv_j, axis=2, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vb_, kv_j, axis=2, keepdims=False)
+            ok = _valid_mask(
+                rows + i * q_block, cols + kv_j * kv_block,
+                causal=causal, window=window, kv_len=skv,
+            )
+            _, ds = _p_ds(q_t, do_t, lse_t, delta_t, k_j, v_j, ok)
+            acc = acc + scale_ * jnp.einsum("bhgqk,bhkd->bhgqd", ds, k_j)
+            return acc, None
+
+        init = jnp.zeros((b, hkv, g, q_block, d), jnp.float32)
+        acc, _ = jax.lax.scan(body, init, jnp.arange(nkv))
+        return acc
+
+    dq = jax.vmap(dq_block, in_axes=(0, 3, 3, 3, 3), out_axes=3)(
+        jnp.arange(nq), qb_, dob_, lseb, deltab
+    )
+    dq = dq.transpose(0, 3, 4, 1, 2, 5).reshape(b, sq_p, hq, d)[:, :sq]
+
+    # ---- dK/dV pass: transposed grid (KV resident, Q/dO streamed) ------------
+    def dkv_block(jt, k_t, v_t):
+        def body(carry, jq):
+            dk_acc, dv_acc = carry
+            q_i = kv_index(order, jt, jq, nq)  # transposed: parity on KV tile
+            q_t = jax.lax.dynamic_index_in_dim(qb_, q_i, axis=3, keepdims=False)
+            do_t = jax.lax.dynamic_index_in_dim(dob_, q_i, axis=3, keepdims=False)
+            lse_t = jax.lax.dynamic_index_in_dim(lseb, q_i, axis=3, keepdims=False)
+            delta_t = jax.lax.dynamic_index_in_dim(deltab, q_i, axis=3, keepdims=False)
+            ok = _valid_mask(
+                rows + q_i * q_block, cols + jt * kv_block,
+                causal=causal, window=window, kv_len=skv,
+            )
+            p, ds = _p_ds(q_t, do_t, lse_t, delta_t, k_t, v_t, ok)
+            dv_acc = dv_acc + jnp.einsum("bhgqk,bhgqd->bhkd", p, do_t)
+            dk_acc = dk_acc + scale_ * jnp.einsum("bhgqk,bhgqd->bhkd", ds, q_t)
+            return (dk_acc, dv_acc), None
+
+        init = (
+            jnp.zeros((b, hkv, kv_block, d), jnp.float32),
+            jnp.zeros((b, hkv, kv_block, d), jnp.float32),
+        )
+        (dk_acc, dv_acc), _ = jax.lax.scan(body, init, jnp.arange(nq))
+        return dk_acc, dv_acc
+
+    dk, dv = jax.vmap(dkv_block, in_axes=(0, 2, 2), out_axes=2)(
+        jnp.arange(nkv), kb_, vb_
+    )  # (B, Hkv, nkv, kb, D)
+    dk = dk.transpose(0, 2, 3, 1, 4).reshape(b, skv_p, hkv, d)[:, :skv]
+    dv = dv.transpose(0, 2, 3, 1, 4).reshape(b, skv_p, hkv, d)[:, :skv]
+
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
 def decode_attention(

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterator, Sequence
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,11 +33,14 @@ import numpy as np
 __all__ = [
     "Order",
     "KVSchedule",
+    "BwdKVSchedule",
+    "bwd_kv_schedule",
     "kv_index",
     "kv_index_host",
     "page_visit_order",
     "tile_ids",
     "num_kv_tiles_for",
+    "q_tile_bounds_for",
 ]
 
 
@@ -109,6 +112,32 @@ def num_kv_tiles_for(
         return n_kv
     last_row = (q_tile + 1) * q_block - 1
     return min(n_kv, last_row // kv_block + 1)
+
+
+def q_tile_bounds_for(
+    kv_tile: int,
+    n_q: int,
+    *,
+    causal: bool,
+    window: Optional[int],
+    q_block: int,
+    kv_block: int,
+) -> tuple[int, int]:
+    """Inclusive [lo, hi] Q-tile range that touches ``kv_tile`` (transposed
+    trimming, for the dK/dV backward grid).
+
+    The transpose of :func:`num_kv_tiles_for`: causal masking means KV tile
+    ``j`` (cols [j*kb, (j+1)*kb)) is only visible to Q tiles whose last row
+    reaches its first column, so ``lo`` rises with ``j``; a sliding window
+    caps ``hi`` because rows beyond ``col + window - 1`` no longer see it.
+    """
+    lo = (kv_tile * kv_block) // q_block if causal else 0
+    if window is not None:
+        last_row = (kv_tile + 1) * kv_block + window - 2
+        hi = min(n_q - 1, last_row // q_block)
+    else:
+        hi = n_q - 1
+    return lo, hi
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,6 +249,141 @@ class KVSchedule:
     def flat_trace(self, n_workers: int = 1) -> list[tuple[str, int]]:
         """Trace without worker ids (cache sees the interleaved stream)."""
         return [(t, tile) for (_, t, tile) in self.wavefront_trace(n_workers)]
+
+    def bwd(self, window: Optional[int] = None) -> "BwdKVSchedule":
+        """The transposed (dK/dV) schedule over the same tile geometry."""
+        return BwdKVSchedule(
+            order=self.order,
+            n_q=self.n_q,
+            n_kv=self.n_kv,
+            causal=self.causal,
+            window=window,
+            q_block=self.q_block,
+            kv_block=self.kv_block,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BwdKVSchedule:
+    """Transposed traversal schedule for the dK/dV backward grid.
+
+    In the flash backward's dK/dV pass the roles flip: each worker parks on
+    one *KV* tile (accumulating dK/dV) and streams the *Q*-side operands
+    (Q, dO, plus the per-row LSE/delta vectors). The cyclic-traversal L2
+    pathology the paper targets therefore reappears on the Q stream —
+    every KV tile revisits the full sweep of Q tiles — and the same
+    sawtooth reordering applies, with parity keyed on the worker-local
+    resident (KV-tile) counter. Causal masking trims the *low* end of the
+    Q range per KV tile (the transpose of the forward's high-end trim);
+    a sliding window trims the high end.
+    """
+
+    order: Order
+    n_q: int
+    n_kv: int
+    causal: bool = False
+    window: Optional[int] = None
+    q_block: int = 128
+    kv_block: int = 128
+
+    def __post_init__(self):
+        object.__setattr__(self, "order", Order.parse(self.order))
+        if self.n_q <= 0 or self.n_kv <= 0:
+            raise ValueError(f"empty schedule: n_q={self.n_q} n_kv={self.n_kv}")
+
+    # ---- per-worker iteration ------------------------------------------------
+
+    def q_bounds(self, kv_tile: int) -> tuple[int, int]:
+        return q_tile_bounds_for(
+            kv_tile,
+            self.n_q,
+            causal=self.causal,
+            window=self.window,
+            q_block=self.q_block,
+            kv_block=self.kv_block,
+        )
+
+    def q_range(self, kv_tile: int) -> int:
+        lo, hi = self.q_bounds(kv_tile)
+        return hi - lo + 1
+
+    def q_order(self, kv_tile: int, local_iter: int | None = None) -> list[int]:
+        """The sequence of Q tile ids streamed while parked on ``kv_tile``."""
+        li = kv_tile if local_iter is None else local_iter
+        lo, hi = self.q_bounds(kv_tile)
+        n = hi - lo + 1
+        return [lo + kv_index_host(self.order, li, j, n) for j in range(n)]
+
+    # ---- global traces (cache simulation) ------------------------------------
+
+    def worker_assignments(self, n_workers: int) -> list[list[int]]:
+        """Round-robin KV-tile assignment (the resident tile of this grid)."""
+        if n_workers <= 0:
+            raise ValueError("n_workers must be positive")
+        return [list(range(w, self.n_kv, n_workers)) for w in range(n_workers)]
+
+    def wavefront_trace(self, n_workers: int) -> Iterator[tuple[int, str, int]]:
+        """Lock-step wavefront trace of the dK/dV grid.
+
+        Tensors: 'K','V' once per resident KV tile, 'Q','dO' per inner
+        step (Q-stream tile ids), 'dK','dV' written at tile end. Sawtooth
+        parity is the worker-local resident counter, mirroring
+        :meth:`KVSchedule.wavefront_trace`.
+        """
+        assignments = self.worker_assignments(n_workers)
+        pos = [0] * len(assignments)
+        inner = [0] * len(assignments)
+        active = [len(a) > 0 for a in assignments]
+        emitted_kv = [False] * len(assignments)
+        while any(active):
+            for w, assign in enumerate(assignments):
+                if not active[w]:
+                    continue
+                kv_tile = assign[pos[w]]
+                local_iter = pos[w]
+                lo, hi = self.q_bounds(kv_tile)
+                n = hi - lo + 1
+                if not emitted_kv[w]:
+                    yield (w, "K", kv_tile)
+                    yield (w, "V", kv_tile)
+                    emitted_kv[w] = True
+                qt = lo + kv_index_host(self.order, local_iter, inner[w], n)
+                yield (w, "Q", qt)
+                yield (w, "dO", qt)
+                inner[w] += 1
+                if inner[w] >= n:
+                    yield (w, "dK", kv_tile)
+                    yield (w, "dV", kv_tile)
+                    inner[w] = 0
+                    emitted_kv[w] = False
+                    pos[w] += 1
+                    if pos[w] >= len(assign):
+                        active[w] = False
+
+    def flat_trace(self, n_workers: int = 1) -> list[tuple[str, int]]:
+        return [(t, tile) for (_, t, tile) in self.wavefront_trace(n_workers)]
+
+
+def bwd_kv_schedule(
+    order: Order | str,
+    n_q: int,
+    n_kv: int,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    q_block: int = 128,
+    kv_block: int = 128,
+) -> BwdKVSchedule:
+    """Build the transposed (dK/dV) schedule directly from grid geometry."""
+    return BwdKVSchedule(
+        order=Order.parse(order),
+        n_q=n_q,
+        n_kv=n_kv,
+        causal=causal,
+        window=window,
+        q_block=q_block,
+        kv_block=kv_block,
+    )
 
 
 def tile_ids(seq_len: int, block: int) -> int:

@@ -4,11 +4,15 @@
 
   * dispatches to the Pallas TPU kernel on TPU backends, the blockwise pure
     JAX path elsewhere (CPU dry-run / tests), or an explicit impl override
-    ('pallas' | 'pallas_interpret' | 'xla' | 'reference'),
+    ('pallas' | 'pallas_interpret' | 'xla' | 'jnp' | 'reference'),
   * carries the KV schedule (cyclic / sawtooth) through to whichever path,
-  * is differentiable: forward may run Pallas; backward recomputes through
-    the mathematically-identical blockwise JAX path (memory-safe flash-style
-    recompute, see DESIGN.md §7.5).
+  * is differentiable with a *fused* flash backward (DESIGN.md §7.5): the
+    forward saves ``(o, lse)`` residuals and the backward dispatches to the
+    Pallas backward kernels ('pallas' / 'pallas_interpret') or the fused
+    blockwise JAX backward ('xla') — no forward recompute. ``impl='jnp'``
+    keeps the old recompute-VJP path (differentiate through the blockwise
+    forward) as the fallback; 'reference' recomputes through the
+    full-materialization oracle (tiny shapes only).
 """
 
 from __future__ import annotations
@@ -22,13 +26,17 @@ import jax.numpy as jnp
 from repro.core import attention as core_attn
 from repro.core.schedule import Order
 from repro.kernels import ref as kref
+from repro.kernels import flash_attention as kflash
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.flash_decode import flash_decode_fwd
 from repro.kernels.ssd import ssd_fwd
 
 __all__ = ["attention", "attention_decode", "ssd", "default_impl"]
 
-Impl = str  # 'auto' | 'pallas' | 'pallas_interpret' | 'xla' | 'reference'
+Impl = str  # 'auto' | 'pallas' | 'pallas_interpret' | 'xla' | 'jnp' | 'reference'
+
+# Impls whose backward consumes (o, lse) residuals instead of recomputing.
+_FUSED_BWD_IMPLS = ("pallas", "pallas_interpret", "xla")
 
 
 def default_impl() -> str:
@@ -39,7 +47,10 @@ def _resolve(impl: Impl) -> str:
     return default_impl() if impl == "auto" else impl
 
 
-def _fwd_dispatch(q, k, v, *, impl, order, causal, window, scale, q_block, kv_block, score_dtype):
+def _fwd_dispatch(
+    q, k, v, *, impl, order, causal, window, scale, q_block, kv_block, score_dtype,
+    return_lse=False,
+):
     impl = _resolve(impl)
     if impl in ("pallas", "pallas_interpret"):
         return flash_attention_fwd(
@@ -53,8 +64,9 @@ def _fwd_dispatch(q, k, v, *, impl, order, causal, window, scale, q_block, kv_bl
             q_block=q_block,
             kv_block=kv_block,
             interpret=(impl == "pallas_interpret"),
+            return_lse=return_lse,
         )
-    if impl == "xla":
+    if impl in ("xla", "jnp"):
         return core_attn.flash_attention(
             q,
             k,
@@ -66,16 +78,22 @@ def _fwd_dispatch(q, k, v, *, impl, order, causal, window, scale, q_block, kv_bl
             q_block=q_block,
             kv_block=kv_block,
             score_dtype=score_dtype,
+            return_lse=return_lse,
         )
     if impl == "reference":
-        return kref.flash_attention_ref(
+        out = kref.flash_attention_ref(
             q, k, v, causal=causal, window=window, scale=scale
         )
+        assert not return_lse, "reference impl has no fused backward"
+        return out
     raise ValueError(f"unknown attention impl: {impl!r}")
 
 
 @functools.lru_cache(maxsize=None)
-def _make_attention(impl, order, causal, window, scale, q_block, kv_block, score_dtype):
+def _make_attention(
+    impl, order, causal, window, scale, q_block, kv_block, score_dtype,
+    bwd_q_block, bwd_kv_block,
+):
     """Build a custom_vjp attention fn for one static configuration."""
 
     cfg = dict(
@@ -88,10 +106,13 @@ def _make_attention(impl, order, causal, window, scale, q_block, kv_block, score
         kv_block=kv_block,
         score_dtype=score_dtype,
     )
+    bqb = bwd_q_block or q_block
+    bkb = bwd_kv_block or kv_block
 
-    def _bwd_fn(q, k, v):
-        # Backward always differentiates the blockwise JAX path (order kept:
-        # the schedule is math-preserving, so grads match any forward impl).
+    def _recompute_fn(q, k, v):
+        # The recompute fallback differentiates the blockwise JAX path
+        # (order kept: the schedule is math-preserving, so grads match any
+        # forward impl) — one extra attention pass per backward.
         return core_attn.flash_attention(
             q,
             k,
@@ -110,11 +131,47 @@ def _make_attention(impl, order, causal, window, scale, q_block, kv_block, score
         return _fwd_dispatch(q, k, v, **cfg)
 
     def fwd(q, k, v):
-        return attn(q, k, v), (q, k, v)
+        r = _resolve(impl)
+        if r in _FUSED_BWD_IMPLS:
+            o, lse = _fwd_dispatch(q, k, v, **{**cfg, "impl": r}, return_lse=True)
+            return o, (q, k, v, o, lse)
+        return attn(q, k, v), (q, k, v, None, None)
 
     def bwd(res, g):
-        q, k, v = res
-        _, vjp = jax.vjp(_bwd_fn, q, k, v)
+        q, k, v, o, lse = res
+        r = _resolve(impl)
+        if r in ("pallas", "pallas_interpret"):
+            return kflash.flash_attention_bwd(
+                q, k, v, o, lse, g,
+                order=order,
+                causal=causal,
+                window=window,
+                scale=scale,
+                q_block=bqb,
+                kv_block=bkb,
+                interpret=(r == "pallas_interpret"),
+            )
+        if r == "xla":
+            return core_attn.flash_attention_bwd(
+                q, k, v, o, lse, g,
+                order=order,
+                causal=causal,
+                window=window,
+                scale=scale,
+                q_block=bqb,
+                kv_block=bkb,
+                score_dtype=score_dtype,
+            )
+        if r == "reference":
+            _, vjp = jax.vjp(
+                lambda q_, k_, v_: kref.flash_attention_ref(
+                    q_, k_, v_, causal=causal, window=window, scale=scale
+                ),
+                q, k, v,
+            )
+            return vjp(g)
+        # 'jnp': memory-safe flash-style recompute (the pre-fused design).
+        _, vjp = jax.vjp(_recompute_fn, q, k, v)
         return vjp(g)
 
     attn.defvjp(fwd, bwd)
@@ -134,10 +191,22 @@ def attention(
     kv_block: int = 256,
     impl: Impl = "auto",
     score_dtype: str = "float32",
+    bwd_q_block: Optional[int] = None,
+    bwd_kv_block: Optional[int] = None,
 ) -> jax.Array:
-    """Flash attention, layout (B, S, H, D); GQA via Hq > Hkv."""
+    """Flash attention, layout (B, S, H, D); GQA via Hq > Hkv.
+
+    ``bwd_q_block`` / ``bwd_kv_block`` size the fused backward kernels'
+    tiles (default: the forward blocks) — the backward's working set is
+    larger (Q, dO, lse, delta stream against a resident dK/dV accumulator),
+    so its optimum is usually smaller; benchmarks/hillclimb.py autotunes
+    them separately.
+    """
     order = Order.parse(order)
-    fn = _make_attention(impl, order, causal, window, scale, q_block, kv_block, score_dtype)
+    fn = _make_attention(
+        impl, order, causal, window, scale, q_block, kv_block, score_dtype,
+        bwd_q_block, bwd_kv_block,
+    )
     return fn(q, k, v)
 
 

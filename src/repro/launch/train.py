@@ -49,6 +49,17 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "adamw_factored"])
     ap.add_argument("--attn-order", default="sawtooth", choices=["cyclic", "sawtooth"])
+    ap.add_argument(
+        "--attn-impl",
+        default=None,
+        choices=["auto", "pallas", "pallas_interpret", "xla", "jnp", "reference"],
+        help="attention impl; fused flash backward for pallas*/xla, "
+        "'jnp' keeps the recompute-VJP fallback",
+    )
+    ap.add_argument("--bwd-q-block", type=int, default=None,
+                    help="fused-backward q tile (default: q_block)")
+    ap.add_argument("--bwd-kv-block", type=int, default=None,
+                    help="fused-backward kv tile (default: kv_block)")
     ap.add_argument("--crash-at", type=int, default=None, help="inject failure (FT demo)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -59,6 +70,12 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     overrides = {"attn_order": args.attn_order}
+    if args.attn_impl:
+        overrides.update(attn_impl=args.attn_impl)
+    if args.bwd_q_block:
+        overrides.update(bwd_q_block=args.bwd_q_block)
+    if args.bwd_kv_block:
+        overrides.update(bwd_kv_block=args.bwd_kv_block)
     if args.d_model:
         overrides.update(d_model=args.d_model)
     if args.layers:

@@ -98,6 +98,8 @@ def attn_apply(
         kv_block=cfg.kv_block,
         impl=cfg.attn_impl,
         score_dtype=cfg.score_dtype,
+        bwd_q_block=cfg.bwd_q_block,
+        bwd_kv_block=cfg.bwd_kv_block,
     )
     b, s, _, _ = o.shape
     out = L.dense(p["wo"], o.reshape(b, s, -1), dtype=cfg.activation_dtype())

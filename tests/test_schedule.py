@@ -132,6 +132,100 @@ def test_wavefront_trace_length_order_invariant(causal, n_workers):
         assert na == nb, tensor
 
 
+# --------------------------------------------------------------------------
+# transposed (dK/dV backward) schedule
+# --------------------------------------------------------------------------
+
+
+def test_bwd_schedule_transposes_forward_coverage():
+    """(q, kv) pair coverage of the bwd grid == transpose of the fwd grid."""
+    from repro.core.schedule import bwd_kv_schedule
+
+    fwd = KVSchedule(Order.SAWTOOTH, n_q=6, n_kv=6, causal=True, q_block=64, kv_block=64)
+    bwd = fwd.bwd()
+    fwd_pairs = {(i, kv) for i in range(6) for kv in fwd.kv_order(i)}
+    bwd_pairs = {(qt, j) for j in range(6) for qt in bwd.q_order(j)}
+    assert fwd_pairs == bwd_pairs
+    # factory form builds the same schedule
+    assert bwd == bwd_kv_schedule(
+        "sawtooth", 6, 6, causal=True, q_block=64, kv_block=64
+    )
+
+
+def test_bwd_schedule_causal_trims_low_end():
+    from repro.core.schedule import q_tile_bounds_for
+
+    # causal: kv tile j is invisible to q tiles below it
+    for j in range(8):
+        lo, hi = q_tile_bounds_for(j, 8, causal=True, window=None, q_block=64, kv_block=64)
+        assert (lo, hi) == (j, 7)
+    # rectangular blocks: q tiles twice the kv tiles
+    lo, hi = q_tile_bounds_for(5, 4, causal=True, window=None, q_block=128, kv_block=64)
+    assert (lo, hi) == (2, 3)
+    # sliding window trims the high end
+    lo, hi = q_tile_bounds_for(0, 8, causal=True, window=128, q_block=64, kv_block=64)
+    assert (lo, hi) == (0, 2)  # rows < 64 + 128 - 1 see kv tile 0
+
+
+def test_bwd_schedule_sawtooth_boundary_reuse():
+    """Transposed defining property: last q tile of resident sweep t is the
+    first q tile of sweep t+1 (when the trimmed ranges allow)."""
+    from repro.core.schedule import bwd_kv_schedule
+
+    s = bwd_kv_schedule("sawtooth", 7, 6)
+    for j in range(5):
+        assert s.q_order(j)[-1] == s.q_order(j + 1)[0]
+
+
+@pytest.mark.parametrize("n_workers", [1, 2, 5])
+@pytest.mark.parametrize("causal", [False, True])
+def test_bwd_wavefront_trace_covers_everything(n_workers, causal):
+    from repro.core.schedule import bwd_kv_schedule
+
+    s = bwd_kv_schedule("sawtooth", 5, 4, causal=causal, q_block=64, kv_block=64)
+    trace = list(s.wavefront_trace(n_workers))
+    # resident K/V emitted once per kv tile; dK/dV written once per kv tile
+    for t in ("K", "V", "dK", "dV"):
+        assert sorted(tile for (_, tt, tile) in trace if tt == t) == [0, 1, 2, 3], t
+    # Q stream covers exactly the trimmed transposed ranges
+    per_kv: dict[int, list[int]] = {}
+    current = {}
+    for w, tt, tile in trace:
+        if tt == "K":
+            current[w] = tile
+            per_kv.setdefault(tile, [])
+        elif tt == "Q":
+            per_kv[current[w]].append(tile)
+    for j, qs in per_kv.items():
+        lo, hi = s.q_bounds(j)
+        assert sorted(qs) == list(range(lo, hi + 1)), (j, qs)
+
+
+def test_bwd_worker_assignments_round_robin_over_kv_tiles():
+    from repro.core.schedule import bwd_kv_schedule
+
+    s = bwd_kv_schedule("cyclic", 4, 10)
+    a = s.worker_assignments(3)
+    assert a[0] == [0, 3, 6, 9] and a[1] == [1, 4, 7] and a[2] == [2, 5, 8]
+
+
+def test_bwd_trace_length_order_invariant():
+    from repro.core.schedule import bwd_kv_schedule
+
+    traces = {
+        order: bwd_kv_schedule(
+            order, 6, 5, causal=True, q_block=64, kv_block=64
+        ).flat_trace(2)
+        for order in Order
+    }
+    a, b = traces[Order.CYCLIC], traces[Order.SAWTOOTH]
+    assert len(a) == len(b)
+    for tensor in ("Q", "dO", "K", "V", "dK", "dV"):
+        assert sorted(t for tt, t in a if tt == tensor) == sorted(
+            t for tt, t in b if tt == tensor
+        ), tensor
+
+
 def test_page_visit_order_matches_kv_index():
     import numpy as np
 
