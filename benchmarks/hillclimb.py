@@ -243,6 +243,139 @@ def autotune_bwd(arch: str, *, seq: int, batch: int, impl: str, reps: int,
     return rec
 
 
+def sweep_orders(arch: str, *, seq: int, batch: int, impl: str, reps: int,
+                 blocks=(128, 256, 512), groups=(4, 8, 16, 32),
+                 n_workers: int = 12, capacity_mib: float = 3.0,
+                 measure_seq: int | None = None):
+    """Joint (order, snake_group, blocks) sweep: modeled LLC bytes + wall time.
+
+    The traversal order is free at the kernel level (the bodies are
+    identical), so on CPU the discriminating signal is the *modeled* memory
+    system: per (order, group, q_block/kv_block) candidate this replays the
+    forward wavefront and the transposed dK/dV wavefront through the shared
+    LRU (``fwd_llc_model``/``bwd_dkv_llc_model``) at a fixed modeled LLC
+    capacity — absolute bytes, so block-size candidates compete on equal
+    hardware — and ranks by total non-compulsory miss bytes. The jitted
+    train-microstep (same objective as ``--autotune-bwd``) is then timed for
+    the top candidates as a sanity check that the winning blocks are not
+    compute-pathological. Writes artifacts/hillclimb/order_sweep_*.json
+    with the winning ``(order, snake_group, q_block, kv_block)`` tuple.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.kernels import ops
+    from repro.kernels.traffic import (
+        FlashGridSpec, bwd_dkv_llc_model, fwd_llc_model,
+    )
+
+    cfg = get_config(arch)
+    hd = cfg.hd
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    capacity_bytes = capacity_mib * 2**20
+    measure_seq = measure_seq or min(seq, 1024)
+
+    candidates = []
+    for blk in blocks:
+        if blk > seq:
+            continue
+        spec = FlashGridSpec(
+            seq_q=seq, seq_kv=seq, n_groups=hq // hkv, head_dim=hd,
+            q_block=blk, kv_block=blk, causal=True, window=cfg.window,
+        )
+        for order, group_list in (
+            ("cyclic", [None]), ("sawtooth", [None]), ("block_snake", list(groups)),
+        ):
+            for g in group_list:
+                if g is not None and g >= spec.nkv:
+                    continue  # degenerate: == sawtooth at this block size
+                fwd = fwd_llc_model(
+                    spec, order, snake_group=g, n_workers=n_workers,
+                    capacity_bytes=capacity_bytes,
+                )
+                bwd = bwd_dkv_llc_model(
+                    spec, order, snake_group=g, n_workers=n_workers,
+                    capacity_bytes=capacity_bytes,
+                )
+                miss = fwd.non_compulsory_misses + bwd.non_compulsory_misses
+                candidates.append({
+                    "order": order, "snake_group": g,
+                    "q_block": blk, "kv_block": blk,
+                    "fwd_noncomp_miss_bytes": fwd.non_compulsory_misses,
+                    "bwd_noncomp_miss_bytes": bwd.non_compulsory_misses,
+                    "total_noncomp_miss_bytes": miss,
+                })
+                print(f"[sweep-orders {arch}] {order}"
+                      f"{'' if g is None else f'(g={g})'} blk={blk}: "
+                      f"modeled miss {miss/2**20:.2f} MiB")
+    if not candidates:
+        raise SystemExit(
+            f"sweep-orders: no block size in {blocks} fits --seq {seq}; "
+            "pass a larger --seq or smaller blocks"
+        )
+    candidates.sort(key=lambda c: c["total_noncomp_miss_bytes"])
+
+    # time the microstep for the best candidate per order family
+    seen = set()
+    for c in candidates:
+        if c["order"] in seen:
+            continue
+        seen.add(c["order"])
+        q = jax.random.normal(jax.random.PRNGKey(1), (batch, measure_seq, hq, hd), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(2), (batch, measure_seq, hkv, hd), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(3), (batch, measure_seq, hkv, hd), jnp.float32)
+
+        def loss(q, k, v, c=c):
+            out = ops.attention(
+                q, k, v, order=c["order"], causal=True, window=cfg.window,
+                q_block=c["q_block"], kv_block=c["kv_block"], impl=impl,
+                score_dtype=cfg.score_dtype, snake_group=c["snake_group"],
+            )
+            return (out.astype(jnp.float32) ** 2).sum()
+
+        fn = jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
+        jax.block_until_ready(fn(q, k, v))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(q, k, v))
+        c["microstep_s"] = (time.perf_counter() - t0) / reps
+        print(f"[sweep-orders {arch}] timed {c['order']} "
+              f"blk={c['q_block']}: {c['microstep_s']:.4f}s")
+
+    winner = candidates[0]
+    rec = {
+        "arch": arch,
+        "seq": seq,
+        "measure_seq": measure_seq,
+        "batch": batch,
+        "impl": impl,
+        "backend": jax.default_backend(),
+        "n_workers": n_workers,
+        "capacity_mib": capacity_mib,
+        "winner": {
+            "order": winner["order"],
+            "snake_group": winner["snake_group"],
+            "q_block": winner["q_block"],
+            "kv_block": winner["kv_block"],
+        },
+        "candidates": candidates,
+    }
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, f"order_sweep_{arch.replace('/', '_')}_s{seq}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    wg = "" if winner["snake_group"] is None else f"(g={winner['snake_group']})"
+    print(
+        f"[sweep-orders {arch}] winner: {winner['order']}{wg} "
+        f"blocks=({winner['q_block']},{winner['kv_block']}) "
+        f"modeled miss {winner['total_noncomp_miss_bytes']/2**20:.2f} MiB -> {path}"
+    )
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(EXPERIMENTS))
@@ -250,12 +383,34 @@ def main():
     ap.add_argument("--autotune-bwd", default=None, metavar="ARCH",
                     help="grid-search backward block sizes on a jitted "
                     "train-microstep for ARCH, then exit")
+    ap.add_argument("--sweep-orders", default=None, metavar="ARCH",
+                    help="joint (order, snake_group, blocks) sweep: modeled "
+                    "LLC miss bytes + microstep timing for ARCH, then exit")
+    ap.add_argument("--capacity-mib", type=float, default=3.0,
+                    help="modeled LLC capacity for --sweep-orders (MiB)")
+    ap.add_argument("--llc-workers", type=int, default=12,
+                    help="wavefront workers in the --sweep-orders LLC model")
+    ap.add_argument("--sweep-blocks", default="128,256,512",
+                    help="comma-separated block sizes for --sweep-orders")
+    ap.add_argument("--sweep-groups", default="4,8,16,32",
+                    help="comma-separated snake_group candidates for "
+                    "--sweep-orders")
     ap.add_argument("--seq", type=int, default=1024)
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--impl", default="xla",
                     choices=["auto", "pallas", "pallas_interpret", "xla"])
     ap.add_argument("--reps", type=int, default=3)
     args = ap.parse_args()
+
+    if args.sweep_orders:
+        sweep_orders(
+            args.sweep_orders, seq=args.seq, batch=args.batch,
+            impl=args.impl, reps=args.reps,
+            blocks=tuple(int(x) for x in args.sweep_blocks.split(",")),
+            groups=tuple(int(x) for x in args.sweep_groups.split(",")),
+            n_workers=args.llc_workers, capacity_mib=args.capacity_mib,
+        )
+        return
 
     if args.autotune_bwd:
         # no dryrun import: keep the real device count (the 512-device flag

@@ -75,7 +75,16 @@ class ModelConfig:
                                              # | xla (fused blockwise bwd)
                                              # | jnp (recompute-VJP fallback)
                                              # | reference
-    attn_order: str = "sawtooth"             # the paper's technique, on by default
+    attn_order: str = "sawtooth"             # KV traversal order: cyclic |
+                                             # sawtooth (the paper's technique,
+                                             # on by default) | block_snake
+                                             # (capacity-bounded reversal —
+                                             # core/schedule.py Traversal IR)
+    snake_group: Optional[int] = None        # block_snake reversal window in
+                                             # KV tiles; None = schedule
+                                             # default. Size to the modeled
+                                             # LLC (benchmarks/hillclimb.py
+                                             # --sweep-orders).
     q_block: int = 512
     kv_block: int = 512
     bwd_q_block: Optional[int] = None        # fused-backward kernel tiles;

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedule import KVSchedule, Order, kv_index
+from repro.core.schedule import KVSchedule, Order, Traversal
 
 __all__ = [
     "mha_reference",
@@ -112,6 +112,7 @@ def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
         "kv_block",
         "scale",
         "score_dtype",
+        "snake_group",
         "return_lse",
     ),
 )
@@ -127,6 +128,7 @@ def flash_attention(
     kv_block: int = 128,
     scale: Optional[float] = None,
     score_dtype: str = "float32",
+    snake_group: Optional[int] = None,
     return_lse: bool = False,
 ) -> jax.Array:
     """Blockwise online-softmax attention, KV traversed in schedule order.
@@ -159,6 +161,13 @@ def flash_attention(
     nq, nkv = sq_p // q_block, skv_p // kv_block
 
     # (B, Hkv, G, nq, qb, D) queries; (B, Hkv, nkv, kb, D) keys/values.
+    # The compiled traversal: the XLA path masks instead of trimming, so it
+    # walks the full tile range in IR order (``kv_step``).
+    tr = Traversal(
+        order=order, n_q=nq, n_kv=nkv, causal=causal, window=window,
+        q_block=q_block, kv_block=kv_block, n_groups=g, snake_group=snake_group,
+    )
+
     qb_ = (
         qp.reshape(b, nq, q_block, hkv, g, d)
         .transpose(0, 3, 4, 1, 2, 5)
@@ -175,7 +184,7 @@ def flash_attention(
         # q_tile: (B, Hkv, G, qb, D)
         def body(carry, j):
             m, l, acc = carry
-            kv_j = kv_index(order, i, j, nkv)
+            kv_j = tr.kv_step(i, j)
             k_j = jax.lax.dynamic_index_in_dim(kb_, kv_j, axis=2, keepdims=False)
             v_j = jax.lax.dynamic_index_in_dim(vb_, kv_j, axis=2, keepdims=False)
             # scores/probs in score_dtype (bf16 halves the dominant HBM
@@ -236,6 +245,7 @@ def flash_attention(
         "kv_block",
         "scale",
         "score_dtype",
+        "snake_group",
     ),
 )
 def flash_attention_bwd(
@@ -253,6 +263,7 @@ def flash_attention_bwd(
     kv_block: int = 128,
     scale: Optional[float] = None,
     score_dtype: str = "float32",
+    snake_group: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused blockwise flash backward from saved ``(o, lse)`` residuals.
 
@@ -295,6 +306,17 @@ def flash_attention_bwd(
     sq_p, skv_p = qp.shape[1], kp.shape[1]
     nq, nkv = sq_p // q_block, skv_p // kv_block
 
+    tr = Traversal(
+        order=order, n_q=nq, n_kv=nkv, causal=causal, window=window,
+        q_block=q_block, kv_block=kv_block, n_groups=g, snake_group=snake_group,
+    )
+    # The transposed (dK/dV) pass streams Q tiles with parity on the resident
+    # KV-tile counter: the same IR with the roles of the axes swapped.
+    tr_t = Traversal(
+        order=order, n_q=nkv, n_kv=nq, q_block=kv_block, kv_block=q_block,
+        snake_group=snake_group,
+    )
+
     def fold_q(x):  # (B, Sq, Hq[, D]) -> (B, Hkv, G, nq, qb[, D])
         tail = x.shape[3:]
         x = x.reshape((b, nq, q_block, hkv, g) + tail)
@@ -328,7 +350,7 @@ def flash_attention_bwd(
     # ---- dQ pass: forward grid (Q resident, KV streamed) ---------------------
     def dq_block(i, q_t, do_t, lse_t, delta_t):
         def body(acc, j):
-            kv_j = kv_index(order, i, j, nkv)
+            kv_j = tr.kv_step(i, j)
             k_j = jax.lax.dynamic_index_in_dim(kb_, kv_j, axis=2, keepdims=False)
             v_j = jax.lax.dynamic_index_in_dim(vb_, kv_j, axis=2, keepdims=False)
             ok = _valid_mask(
@@ -352,7 +374,7 @@ def flash_attention_bwd(
     def dkv_block(jt, k_t, v_t):
         def body(carry, jq):
             dk_acc, dv_acc = carry
-            q_i = kv_index(order, jt, jq, nq)  # transposed: parity on KV tile
+            q_i = tr_t.kv_step(jt, jq)  # transposed: parity on KV tile
             q_t = jax.lax.dynamic_index_in_dim(qb_, q_i, axis=3, keepdims=False)
             do_t = jax.lax.dynamic_index_in_dim(dob_, q_i, axis=3, keepdims=False)
             lse_t = jax.lax.dynamic_index_in_dim(lseb, q_i, axis=3, keepdims=False)
@@ -392,6 +414,7 @@ def decode_attention(
     scale: Optional[float] = None,
     block_table: Optional[jax.Array] = None,
     order: Order | str = Order.CYCLIC,
+    snake_group: Optional[int] = None,
 ) -> jax.Array:
     """Single-position decode attention against a (possibly padded) KV cache.
 
@@ -417,6 +440,7 @@ def decode_attention(
             window=window,
             scale=scale,
             order=order,
+            snake_group=snake_group,
         )
     b, one, hq, d = q.shape
     assert one == 1
@@ -446,6 +470,7 @@ def paged_decode_attention(
     window: Optional[int] = None,
     scale: Optional[float] = None,
     order: Order | str = Order.CYCLIC,
+    snake_group: Optional[int] = None,
 ) -> jax.Array:
     """Blockwise decode attention over a paged KV pool, schedule-ordered.
 
@@ -473,7 +498,8 @@ def paged_decode_attention(
     lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
 
     sched = KVSchedule(
-        order, n_q=1, n_kv=n_blocks, causal=False, q_block=1, kv_block=page
+        order, n_q=1, n_kv=n_blocks, causal=False, q_block=1, kv_block=page,
+        snake_group=snake_group,
     )
     visit = sched.page_order(lens)  # (B, n_blocks) logical page ids
     phys = jnp.take_along_axis(block_table.astype(jnp.int32), visit, axis=1)

@@ -105,6 +105,8 @@ def attention_trace(
     hw: HWConfig,
     order: Order | str,
     n_workers: int,
+    *,
+    snake_group: int | None = None,
 ) -> Iterator[tuple[tuple, float]]:
     """Wavefront access trace for the full (batch × heads × tiles) problem.
 
@@ -146,7 +148,7 @@ def attention_trace(
                 yield (("Q", bh, q_tile), spt)
                 started[wk] = True
             j = inner[wk]
-            kv = kv_index_host(order, positions[wk], j, n_kv)
+            kv = kv_index_host(order, positions[wk], j, n_kv, snake_group=snake_group)
             yield (("K", bh, kv), spt)
             yield (("V", bh, kv), spt)
             inner[wk] += 1
@@ -187,6 +189,8 @@ def decode_page_trace(
     lens: Sequence[int],
     n_steps: int,
     page: int,
+    *,
+    snake_group: int | None = None,
 ) -> Iterator[tuple]:
     """Page-granular access trace of a paged continuous-batching decode.
 
@@ -210,7 +214,7 @@ def decode_page_trace(
                 # Parity matches the hot path exactly: the decode kernels are
                 # called with cache_len = length + 1 (the just-written token
                 # included), so that is the sawtooth driver here too.
-                p = kv_index_host(order, length + 1, j, n)
+                p = kv_index_host(order, length + 1, j, n, snake_group=snake_group)
                 yield ("K", s, p)
                 yield ("V", s, p)
             cur[s] = length + 1
@@ -223,6 +227,7 @@ def simulate_paged_decode(
     page: int,
     *,
     capacity_pages: float | None = None,
+    snake_group: int | None = None,
 ) -> dict:
     """Replay a paged decode's page trace; report locality + LRU stats.
 
@@ -231,7 +236,7 @@ def simulate_paged_decode(
     many page entries. The reuse-distance delta between cyclic and sawtooth
     here is the serving-side analogue of the paper's prefill Fig. 8.
     """
-    trace = list(decode_page_trace(order, lens, n_steps, page))
+    trace = list(decode_page_trace(order, lens, n_steps, page, snake_group=snake_group))
     dists = reuse_distances(trace)
     stats = {
         "accesses": len(trace),
@@ -251,8 +256,13 @@ def simulate_attention(
     hw: HWConfig,
     order: Order | str = Order.CYCLIC,
     n_workers: int | None = None,
+    *,
+    snake_group: int | None = None,
 ) -> SimResult:
     """End-to-end: build the wavefront trace and run it through the LRU L2."""
     n_workers = hw.n_workers if n_workers is None else n_workers
     capacity_sectors = hw.cache_bytes / hw.sector_bytes
-    return simulate_trace(attention_trace(w, hw, order, n_workers), capacity_sectors)
+    return simulate_trace(
+        attention_trace(w, hw, order, n_workers, snake_group=snake_group),
+        capacity_sectors,
+    )

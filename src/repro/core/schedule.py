@@ -1,30 +1,52 @@
-"""KV traversal schedules — the paper's core contribution as a composable object.
+"""Traversal IR — the paper's core contribution compiled into one object.
 
 The paper ("Sawtooth Wavefront Reordering", §4) changes the order in which a
-flash-attention worker streams KV tiles for consecutive Q tiles:
+flash-attention worker streams KV tiles for consecutive Q tiles. After PR 3
+that order arithmetic had been privately re-implemented in four layers
+(forward/backward index_maps, the traffic model, the paged decode, the
+blockwise scan); this module is now the *single source of truth*: a
+:class:`Traversal` is compiled from ``(order, grid bounds, causal/SWA
+trimming, GQA fold)`` and emits every lowering the system consumes:
 
-  cyclic   : every Q tile scans KV tiles 0..n-1           (reuse distance = |KV|)
-  sawtooth : even local iterations scan 0..n-1, odd scan n-1..0
-             (mean reuse distance halves; the tail of each pass always hits)
+  (a) traced ``kv_block_index`` / ``stream_block_index`` closures — the
+      Pallas BlockSpec ``index_map`` arithmetic for the forward/dQ grid and
+      the transposed dK/dV grid (``repro.kernels.flash_attention``), also
+      used step-wise by the blockwise XLA path (``repro.core.attention``);
+  (b) vectorized ``visit_order`` rows — the scalar-prefetch operand of the
+      paged decode kernel (``repro.kernels.flash_decode``) and the page
+      walk of ``paged_decode_attention``;
+  (c) host iterators (``kv_order``/``q_order``/``fwd_grid_steps``/
+      ``stream_grid_steps`` plus the wavefront traces on
+      :class:`KVSchedule`/:class:`BwdKVSchedule`) — the replay twins that
+      feed ``repro.kernels.traffic`` and ``repro.core.cache_sim``.
 
-A schedule here is pure data + index arithmetic, shared by
+Order families (all are permutations of the trimmed range — online softmax
+is traversal-order invariant, so every order is math-preserving):
 
-  * the pure-JAX blockwise attention (``repro.core.attention``), which scans
-    KV blocks in schedule order,
-  * the Pallas TPU kernels (``repro.kernels.flash_attention``), where the
-    schedule becomes the BlockSpec ``index_map``,
-  * the cache simulator (``repro.core.cache_sim``), which consumes the access
-    trace the schedule induces.
+  cyclic        : every pass scans tiles 0..n-1.      (reuse distance = |KV|)
+  sawtooth      : odd passes scan n-1..0 (paper Alg. 4); mean reuse
+                  distance halves and the pass-boundary tile always hits.
+  block_snake(g): sawtooth reversal applied *within* KV-tile groups of
+                  ``g`` tiles — groups ascend every pass, the direction
+                  inside each group alternates with pass parity. Degenerate
+                  cases: ``g=1`` is cyclic, ``g>=n`` is sawtooth. Bounding
+                  the reversal to ``g`` tiles bounds the traversal's
+                  *concurrent footprint*: when causal trimming
+                  desynchronizes lock-step workers, sawtooth's full-range
+                  opposite-direction sweeps span the whole KV range while
+                  block_snake keeps co-resident accesses within ~``g``
+                  tiles of each other, so ``g`` can be sized to a shared
+                  LLC's capacity (``kernels/traffic.py:fwd_llc_model``).
 
-Everything is traceable (``lax`` ops on scalar ints) so the same function
-works inside ``index_map`` and inside ``lax.scan`` bodies.
+Everything is traceable (``lax`` ops on scalar ints) so the same arithmetic
+works inside Pallas ``index_map``s and ``lax.scan`` bodies.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterator, Optional, Sequence
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +54,7 @@ import numpy as np
 
 __all__ = [
     "Order",
+    "Traversal",
     "KVSchedule",
     "BwdKVSchedule",
     "bwd_kv_schedule",
@@ -41,48 +64,111 @@ __all__ = [
     "tile_ids",
     "num_kv_tiles_for",
     "q_tile_bounds_for",
+    "DEFAULT_SNAKE_GROUP",
 ]
+
+# Default block_snake group size (KV tiles) when none is configured. 8 tiles
+# of a 512-row kv_block at head_dim 128 bf16 is ~2 MiB of K+V — a few
+# percent of a shared last-level cache, small enough that several
+# desynchronized workers' groups co-reside.
+DEFAULT_SNAKE_GROUP = 8
 
 
 class Order(str, enum.Enum):
-    """Traversal order of the KV inner loop."""
+    """Traversal order family of the KV inner loop."""
 
     CYCLIC = "cyclic"
     SAWTOOTH = "sawtooth"
+    BLOCK_SNAKE = "block_snake"
 
     @classmethod
     def parse(cls, v: "Order | str") -> "Order":
         if isinstance(v, Order):
             return v
-        return cls(str(v).lower())
+        try:
+            return cls(str(v).lower())
+        except ValueError:
+            valid = ", ".join(repr(o.value) for o in cls)
+            raise ValueError(
+                f"unknown traversal order {v!r}; valid orders are: {valid}"
+            ) from None
 
 
-def kv_index(order: Order | str, i, j, n_kv: int):
-    """Traced KV tile index for Q-tile ``i``, inner step ``j``.
+def _is_host_int(*vals) -> bool:
+    return all(isinstance(v, (int, np.integer)) for v in vals)
 
-    Works on python ints and on traced scalars (usable in Pallas index_maps).
-    ``i`` is the *local* iteration number of the worker (paper Alg. 4 uses the
-    per-SM local counter, not the global tile id — with round-robin assignment
-    both have the same parity per worker, so we use the q-tile counter).
+
+def _resolve_group(order: Order, snake_group: Optional[int], n: int) -> int:
+    """Effective reversal-group size over a range of ``n`` tiles.
+
+    The three order families are one arithmetic with different group sizes:
+    cyclic reverses nothing (group 1), sawtooth reverses the whole range
+    (group n), block_snake reverses within groups of ``snake_group``.
+    ``n`` must be a host int here; the traced path resolves with
+    ``jnp.minimum`` inside :meth:`Traversal.kv_block_index`.
+    """
+    if order is Order.CYCLIC:
+        return 1
+    if order is Order.SAWTOOTH:
+        return max(int(n), 1)
+    g = DEFAULT_SNAKE_GROUP if snake_group is None else int(snake_group)
+    if g < 1:
+        raise ValueError(f"snake_group must be >= 1, got {snake_group}")
+    return max(1, min(g, int(n)))
+
+
+def _snake_pos_host(parity: int, j: int, n: int, group: int) -> int:
+    """Grouped-snake position of step ``j`` in a range of ``n`` tiles."""
+    if group <= 1:
+        return j
+    base = (j // group) * group
+    size = min(group, n - base)
+    off = j - base
+    return base + (off if parity % 2 == 0 else (size - 1) - off)
+
+
+def _snake_pos_traced(parity, j, n, group):
+    """Traced grouped-snake position; ``n``/``group`` may be traced scalars."""
+    j = jnp.asarray(j, jnp.int32)
+    group = jnp.maximum(jnp.asarray(group, jnp.int32), 1)
+    base = (j // group) * group
+    size = jnp.minimum(group, jnp.asarray(n, jnp.int32) - base)
+    off = j - base
+    rev = base + (size - 1) - off
+    return jax.lax.select(jnp.asarray(parity, jnp.int32) % 2 == 0, j, rev)
+
+
+def kv_index(order: Order | str, i, j, n_kv: int, *, snake_group: Optional[int] = None):
+    """KV tile index for parity driver ``i``, inner step ``j``, range ``n_kv``.
+
+    Works on python ints and on traced scalars (usable in Pallas index_maps
+    and ``lax.scan`` bodies). ``i`` is the *local* iteration number of the
+    worker (paper Alg. 4 uses the per-SM local counter; with round-robin
+    assignment both have the same parity per worker, so the q-tile counter
+    drives it). ``snake_group`` only matters for ``block_snake``.
     """
     order = Order.parse(order)
     if order is Order.CYCLIC:
         return j
-    rev = (n_kv - 1) - j
-    if isinstance(i, (int, np.integer)) and isinstance(j, (int, np.integer)):
-        return int(j if i % 2 == 0 else rev)
-    return jax.lax.select(jnp.asarray(i) % 2 == 0, jnp.asarray(j), jnp.asarray(rev))
+    group = _resolve_group(order, snake_group, n_kv)
+    if _is_host_int(i, j):
+        return _snake_pos_host(int(i), int(j), n_kv, group)
+    return _snake_pos_traced(i, j, n_kv, group)
 
 
-def kv_index_host(order: Order | str, i: int, j: int, n_kv: int) -> int:
+def kv_index_host(
+    order: Order | str, i: int, j: int, n_kv: int, *, snake_group: Optional[int] = None
+) -> int:
     """Host-side (python int) version of :func:`kv_index`."""
     order = Order.parse(order)
     if order is Order.CYCLIC:
         return j
-    return j if i % 2 == 0 else (n_kv - 1) - j
+    return _snake_pos_host(i, j, n_kv, _resolve_group(order, snake_group, n_kv))
 
 
-def page_visit_order(order: Order | str, parity, n_kv: int) -> jax.Array:
+def page_visit_order(
+    order: Order | str, parity, n_kv: int, *, snake_group: Optional[int] = None
+) -> jax.Array:
     """Vectorized :func:`kv_index`: full visit-order rows for a batch.
 
     ``parity`` is a (B,)-shaped (or scalar) per-row parity driver — during
@@ -97,7 +183,11 @@ def page_visit_order(order: Order | str, parity, n_kv: int) -> jax.Array:
     p = jnp.atleast_1d(jnp.asarray(parity, jnp.int32))[:, None]
     if order is Order.CYCLIC:
         return jnp.broadcast_to(j, (p.shape[0], n_kv))
-    return jnp.where(p % 2 == 0, j, (n_kv - 1) - j)
+    group = _resolve_group(order, snake_group, n_kv)
+    base = (j // group) * group
+    size = jnp.minimum(group, n_kv - base)
+    rev = base + (size - 1) - (j - base)
+    return jnp.where(p % 2 == 0, j, rev)
 
 
 def num_kv_tiles_for(
@@ -140,17 +230,363 @@ def q_tile_bounds_for(
     return lo, hi
 
 
+# --------------------------------------------------------------------------
+# the compiled Traversal
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Traversal:
+    """One attention problem's traversal, compiled for every consumer.
+
+    Fields describe the *grid*: ``n_q``/``n_kv`` sequence tiles of
+    ``q_block``/``kv_block`` rows, ``n_groups`` GQA query groups folded
+    along the row axis (grid rows = ``n_groups * n_q``), causal/SWA
+    trimming. ``snake_group`` parameterizes ``block_snake``; it is ignored
+    by the other orders. The object is hashable/static, so it can close
+    over Pallas kernels and live in jit static args.
+    """
+
+    order: Order
+    n_q: int
+    n_kv: int
+    causal: bool = False
+    window: Optional[int] = None
+    q_block: int = 128
+    kv_block: int = 128
+    n_groups: int = 1
+    snake_group: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "order", Order.parse(self.order))
+        if self.n_q <= 0 or self.n_kv <= 0:
+            raise ValueError(f"empty traversal: n_q={self.n_q} n_kv={self.n_kv}")
+        if self.n_groups <= 0:
+            raise ValueError(f"n_groups must be positive, got {self.n_groups}")
+        if self.snake_group is not None and self.snake_group < 1:
+            raise ValueError(f"snake_group must be >= 1, got {self.snake_group}")
+
+    @property
+    def grid_rows(self) -> int:
+        """Folded Q rows of the forward grid (GQA groups x sequence tiles)."""
+        return self.n_groups * self.n_q
+
+    def group_for(self, n: int) -> int:
+        """Effective reversal-group size over a trimmed range of ``n`` tiles."""
+        return _resolve_group(self.order, self.snake_group, n)
+
+    def _group_for_traced(self, n):
+        """Traced :meth:`group_for`: ``n`` may be a traced scalar. Only
+        called for the reversing orders (cyclic short-circuits earlier)."""
+        if self.order is Order.SAWTOOTH:
+            return n
+        return jnp.minimum(
+            jnp.int32(self.snake_group or DEFAULT_SNAKE_GROUP), n
+        )
+
+    # ---- (a) traced index arithmetic (Pallas index_maps, scan bodies) -------
+
+    def kv_bounds(self, i):
+        """Traced inclusive [lo, hi] KV-tile range visible to grid row ``i``.
+
+        ``i`` indexes the G-folded rows; the sequence tile is ``i % n_q``.
+        """
+        q_tile = jax.lax.rem(jnp.asarray(i, jnp.int32), self.n_q)
+        if self.causal:
+            last_row = q_tile * self.q_block + (self.q_block - 1)
+            hi = jnp.minimum(self.n_kv - 1, last_row // self.kv_block)
+        else:
+            hi = jnp.int32(self.n_kv - 1)
+        if self.window is not None:
+            first_visible = jnp.maximum(q_tile * self.q_block - (self.window - 1), 0)
+            lo = first_visible // self.kv_block
+        else:
+            lo = jnp.int32(0)
+        return lo, hi
+
+    def kv_block_index(self, i, j):
+        """KV block fetched at fwd/dQ grid step (i, j) + compute predicate.
+
+        Out-of-range steps are clamped to the boundary position — the Pallas
+        pipeline elides the repeated fetch and ``valid`` masks the compute
+        (the TPU analogue of causal grid trimming).
+        """
+        lo, hi = self.kv_bounds(i)
+        raw = hi - lo + 1
+        # Degenerate trims (possible when SWA pushes the visible range past
+        # the KV length) collapse to one always-invalid boundary step; the
+        # clips are no-ops whenever raw >= 1.
+        steps = jnp.maximum(raw, 1)
+        jc = jnp.clip(jnp.asarray(j, jnp.int32), 0, steps - 1)
+        if self.order is Order.CYCLIC:
+            jj = lo + jc
+        else:
+            jj = lo + _snake_pos_traced(i, jc, steps, self._group_for_traced(steps))
+        jj = jnp.clip(jj, 0, self.n_kv - 1)
+        return jj, jnp.asarray(j, jnp.int32) < raw
+
+    def q_bounds(self, jkv):
+        """Traced inclusive [lo, hi] Q-tile range touching KV tile ``jkv``
+        (transposed trimming, for the dK/dV grid)."""
+        jkv = jnp.asarray(jkv, jnp.int32)
+        if self.causal:
+            lo = (jkv * self.kv_block) // self.q_block
+        else:
+            lo = jnp.int32(0)
+        if self.window is not None:
+            last_row = (jkv + 1) * self.kv_block + (self.window - 2)
+            hi = jnp.minimum(self.n_q - 1, last_row // self.q_block)
+        else:
+            hi = jnp.int32(self.n_q - 1)
+        return lo, hi
+
+    def stream_block_index(self, jkv, u):
+        """(group, Q tile) streamed at dK/dV grid step (jkv, u) + predicate.
+
+        The whole per-resident stream — all ``n_groups`` GQA groups over the
+        trimmed Q range — is linearized into one sweep of ``G * steps``
+        positions and reordered *as one range*: sawtooth reverses it as a
+        unit on odd resident counters (so the boundary bundle is
+        pipeline-elided at every sweep transition), block_snake reverses
+        within ``snake_group``-sized windows of the sweep. This is the
+        exact transpose of the forward traversal; :class:`BwdKVSchedule`
+        is the host-side (G=1) model.
+        """
+        lo, hi = self.q_bounds(jkv)
+        raw = hi - lo + 1
+        # KV tiles with an empty Q range (causal with seq_kv > seq_q, or SWA
+        # past the Q length) collapse to one always-invalid boundary step.
+        steps = jnp.maximum(raw, 1)
+        total = self.n_groups * steps
+        uc = jnp.clip(jnp.asarray(u, jnp.int32), 0, total - 1)
+        if self.order is Order.CYCLIC:
+            uu = uc
+        else:
+            uu = _snake_pos_traced(jkv, uc, total, self._group_for_traced(total))
+        gg = uu // steps
+        qi = jnp.clip(lo + jax.lax.rem(uu, steps), 0, self.n_q - 1)
+        return gg, qi, jnp.asarray(u, jnp.int32) < self.n_groups * raw
+
+    def kv_step(self, i, j):
+        """Untrimmed traced KV position for the blockwise (masked) scan:
+        step ``j`` of pass ``i`` over the full ``n_kv`` range. The XLA path
+        masks instead of trimming, so it walks every tile."""
+        return kv_index(self.order, i, j, self.n_kv, snake_group=self.snake_group)
+
+    # ---- (b) vectorized visit-order rows (paged decode scalar prefetch) ------
+
+    def visit_order(self, parity) -> jax.Array:
+        """(B, n_kv) visit-order rows for per-row ``parity`` drivers.
+
+        The paged-decode lowering: the decode paths gather a block table
+        along these rows and the Pallas kernel scalar-prefetches the result
+        as its KV ``index_map`` operand. Traced ``parity`` is fine.
+        """
+        return page_visit_order(
+            self.order, parity, self.n_kv, snake_group=self.snake_group
+        )
+
+    # ---- (c) host replay (traffic models, cache simulator) -------------------
+
+    def kv_bounds_host(self, q_tile: int) -> tuple[int, int]:
+        """Host [lo, hi] KV-tile range for sequence tile ``q_tile``."""
+        if self.causal:
+            hi = min(self.n_kv - 1, (q_tile * self.q_block + self.q_block - 1) // self.kv_block)
+        else:
+            hi = self.n_kv - 1
+        lo = (
+            max(q_tile * self.q_block - (self.window - 1), 0) // self.kv_block
+            if self.window is not None
+            else 0
+        )
+        return lo, hi
+
+    def q_bounds_host(self, kv_tile: int) -> tuple[int, int]:
+        return q_tile_bounds_for(
+            kv_tile,
+            self.n_q,
+            causal=self.causal,
+            window=self.window,
+            q_block=self.q_block,
+            kv_block=self.kv_block,
+        )
+
+    def kv_order(self, q_tile: int, local_iter: Optional[int] = None) -> list[int]:
+        """KV tile ids visited for ``q_tile``, trimmed, in traversal order.
+
+        ``local_iter`` is the worker-local parity driver; defaults to the
+        q-tile id (single-worker view / round-robin keeps parity per worker).
+        """
+        li = q_tile if local_iter is None else local_iter
+        lo, hi = self.kv_bounds_host(q_tile)
+        n = hi - lo + 1
+        return [
+            lo + kv_index_host(self.order, li, j, n, snake_group=self.snake_group)
+            for j in range(n)
+        ]
+
+    def q_order(self, kv_tile: int, local_iter: Optional[int] = None) -> list[int]:
+        """Q tile ids streamed while parked on ``kv_tile`` (transposed)."""
+        li = kv_tile if local_iter is None else local_iter
+        lo, hi = self.q_bounds_host(kv_tile)
+        n = hi - lo + 1
+        return [
+            lo + kv_index_host(self.order, li, j, n, snake_group=self.snake_group)
+            for j in range(n)
+        ]
+
+    def fwd_grid_steps(self) -> Iterator[tuple[int, int, bool]]:
+        """Replay the folded forward/dQ Pallas grid: yields (row, kv, valid).
+
+        Exactly the index_map semantics: out-of-range steps clamp to the
+        boundary block (``valid=False`` — the fetch is elided, the compute
+        skipped). The traffic model consumes this to count DMA bytes.
+        """
+        for i in range(self.grid_rows):
+            lo, hi = self.kv_bounds_host(i % self.n_q)
+            raw = hi - lo + 1
+            steps = max(raw, 1)  # degenerate trims: one always-invalid step
+            order_row = [
+                min(max(lo + kv_index_host(
+                    self.order, i, j, steps, snake_group=self.snake_group
+                ), 0), self.n_kv - 1)
+                for j in range(steps)
+            ]
+            for j in range(self.n_kv):
+                jc = min(j, steps - 1)
+                yield i, order_row[jc], j < raw
+
+    def stream_sweep(self, resident: int, local_iter: Optional[int] = None) -> list[tuple[int, int]]:
+        """The linearized (GQA group, Q tile) stream for one resident KV
+        tile of the transposed grid, in traversal order. Parity defaults to
+        the resident id (``stream_block_index``'s driver); wavefront models
+        pass the worker-local resident counter instead (paper Alg. 4).
+        Empty when causal/SWA trimming leaves no visible Q tiles."""
+        li = resident if local_iter is None else local_iter
+        lo, hi = self.q_bounds_host(resident)
+        steps = hi - lo + 1
+        total = self.n_groups * max(steps, 0)
+        return [
+            (uu // steps, lo + uu % steps)
+            for uu in (
+                kv_index_host(self.order, li, u, total, snake_group=self.snake_group)
+                for u in range(total)
+            )
+        ]
+
+    def worker_assignments(
+        self, n_workers: int, *, transposed: bool = False
+    ) -> list[list[int]]:
+        """Round-robin (grid-stride) resident assignment, paper Alg. 2 —
+        folded Q rows on the forward grid, KV tiles on the transposed one."""
+        if n_workers <= 0:
+            raise ValueError("n_workers must be positive")
+        n_residents = self.n_kv if transposed else self.grid_rows
+        return [list(range(w, n_residents, n_workers)) for w in range(n_workers)]
+
+    def wavefront(
+        self, n_workers: int, *, transposed: bool = False
+    ) -> Iterator[tuple[int, str, object]]:
+        """Lock-step persistent-worker wavefront over the folded grid.
+
+        The paper's execution model (Alg. 2 round-robin assignment, §3.4
+        lock-step progress, Alg. 4 *worker-local* parity): at each global
+        step every still-active worker issues its current access, in worker
+        order. One loop serves both grids:
+
+          forward   — residents are the ``grid_rows`` folded Q rows; yields
+                      ('Q', row) on entry, ('K'|'V', kv_tile) per stream
+                      step, ('O', row) at row end.
+          transposed — residents are the ``n_kv`` KV tiles; yields
+                      ('K'|'V', jkv) on entry, ('Q'|'dO', (group, q_tile))
+                      per stream step, ('dK'|'dV', jkv) at tile end.
+
+        Residents whose trimmed stream is empty still emit their entry/exit
+        bookends (their accumulators exist; they just stream nothing).
+        """
+        assignments = self.worker_assignments(n_workers, transposed=transposed)
+        n_w = len(assignments)
+        pos = [0] * n_w
+        inner = [0] * n_w
+        started = [False] * n_w
+        stream: list = [None] * n_w
+        active = [len(a) > 0 for a in assignments]
+        while any(active):
+            for w, assign in enumerate(assignments):
+                if not active[w]:
+                    continue
+                res = assign[pos[w]]
+                if not started[w]:
+                    if transposed:
+                        yield (w, "K", res)
+                        yield (w, "V", res)
+                        stream[w] = self.stream_sweep(res, local_iter=pos[w])
+                    else:
+                        yield (w, "Q", res)
+                        stream[w] = self.kv_order(res % self.n_q, local_iter=pos[w])
+                    started[w] = True
+                if stream[w]:
+                    item = stream[w][inner[w]]
+                    if transposed:
+                        yield (w, "Q", item)
+                        yield (w, "dO", item)
+                    else:
+                        yield (w, "K", item)
+                        yield (w, "V", item)
+                    inner[w] += 1
+                if not stream[w] or inner[w] >= len(stream[w]):
+                    if transposed:
+                        yield (w, "dK", res)
+                        yield (w, "dV", res)
+                    else:
+                        yield (w, "O", res)
+                    inner[w] = 0
+                    started[w] = False
+                    pos[w] += 1
+                    if pos[w] >= len(assign):
+                        active[w] = False
+
+    def stream_grid_steps(self) -> Iterator[tuple[int, int, int, bool]]:
+        """Replay the transposed dK/dV grid: yields (jkv, group, q, valid)."""
+        for jkv in range(self.n_kv):
+            lo, hi = self.q_bounds_host(jkv)
+            raw = hi - lo + 1
+            steps = max(raw, 1)  # empty Q range: one always-invalid step
+            total = self.n_groups * steps
+            sweep = [
+                kv_index_host(self.order, jkv, u, total, snake_group=self.snake_group)
+                for u in range(total)
+            ]
+            for u in range(self.grid_rows):
+                uu = sweep[min(u, total - 1)]
+                qi = min(max(lo + uu % steps, 0), self.n_q - 1)
+                yield jkv, uu // steps, qi, u < self.n_groups * raw
+
+
+# --------------------------------------------------------------------------
+# schedule wrappers (host wavefront models over the Traversal IR)
+# --------------------------------------------------------------------------
+
+
 @dataclasses.dataclass(frozen=True)
 class KVSchedule:
     """A full traversal schedule for one attention problem instance.
 
+    A thin host-model wrapper over :class:`Traversal` (``.traversal`` is
+    the compiled object): adds the paper's persistent-worker wavefront
+    (Alg. 2 round-robin assignment + §3.4 lock-step trace) on top of the
+    shared order arithmetic.
+
     Attributes:
-      order: cyclic or sawtooth.
-      n_q: number of Q tiles.
-      n_kv: number of KV tiles.
+      order: cyclic, sawtooth, or block_snake.
+      n_q / n_kv: number of Q / KV tiles.
       causal: whether causal masking trims the KV range per Q tile.
-      q_block / kv_block: tile sizes (rows) — only used for causal trimming
-        and for the cache-trace sector weighting.
+      q_block / kv_block: tile sizes (rows) — used for causal trimming and
+        the cache-trace sector weighting.
+      snake_group: block_snake group size (tiles); None = default.
+      window: sliding-window attention — trims the *low* end of each Q
+        tile's KV range (the forward-grid transpose of the BwdKVSchedule
+        high-end trim).
     """
 
     order: Order
@@ -159,34 +595,42 @@ class KVSchedule:
     causal: bool = False
     q_block: int = 128
     kv_block: int = 128
+    snake_group: Optional[int] = None
+    window: Optional[int] = None
 
     def __post_init__(self):
         object.__setattr__(self, "order", Order.parse(self.order))
         if self.n_q <= 0 or self.n_kv <= 0:
             raise ValueError(f"empty schedule: n_q={self.n_q} n_kv={self.n_kv}")
 
+    @property
+    def traversal(self) -> Traversal:
+        """The compiled IR this schedule replays."""
+        return Traversal(
+            order=self.order,
+            n_q=self.n_q,
+            n_kv=self.n_kv,
+            causal=self.causal,
+            window=self.window,
+            q_block=self.q_block,
+            kv_block=self.kv_block,
+            snake_group=self.snake_group,
+        )
+
     # ---- per-worker iteration ------------------------------------------------
 
     def kv_range(self, q_tile: int) -> int:
-        return num_kv_tiles_for(
-            q_tile,
-            self.n_kv,
-            causal=self.causal,
-            q_block=self.q_block,
-            kv_block=self.kv_block,
-        )
+        lo, hi = self.traversal.kv_bounds_host(q_tile)
+        return max(hi - lo + 1, 0)
 
     def kv_order(self, q_tile: int, local_iter: int | None = None) -> list[int]:
         """The sequence of KV tile ids visited for ``q_tile``.
 
-        ``local_iter`` is the worker-local iteration parity driver; defaults to
-        the q_tile id itself (single-worker view / round-robin with G workers
-        keeps parity consistent per worker).
+        ``local_iter`` is the worker-local iteration parity driver; defaults
+        to the q_tile id itself (single-worker view / round-robin with G
+        workers keeps parity consistent per worker).
         """
-        li = q_tile if local_iter is None else local_iter
-        n = self.kv_range(q_tile)
-        idx = [kv_index_host(self.order, li, j, n) for j in range(n)]
-        return idx
+        return self.traversal.kv_order(q_tile, local_iter)
 
     def page_order(self, parity) -> jax.Array:
         """Visit order over this schedule's KV tiles for per-row ``parity``.
@@ -196,15 +640,13 @@ class KVSchedule:
         them in this order (sawtooth alternates per decode step, keyed on
         the cache length). Traced ``parity`` is fine; returns (B, n_kv).
         """
-        return page_visit_order(self.order, parity, self.n_kv)
+        return self.traversal.visit_order(parity)
 
     # ---- global traces (cache simulation) ------------------------------------
 
     def worker_assignments(self, n_workers: int) -> list[list[int]]:
         """Round-robin (grid-stride) Q-tile assignment, paper Alg. 2."""
-        if n_workers <= 0:
-            raise ValueError("n_workers must be positive")
-        return [list(range(w, self.n_q, n_workers)) for w in range(n_workers)]
+        return self.traversal.worker_assignments(n_workers)
 
     def wavefront_trace(self, n_workers: int) -> Iterator[tuple[int, str, int]]:
         """Lock-step wavefront access trace: yields (worker, tensor, tile).
@@ -217,34 +659,7 @@ class KVSchedule:
         q-tile id (distinct tensor namespaces — the simulator keys on
         (tensor, tile)).
         """
-        assignments = self.worker_assignments(n_workers)
-        # Per-worker iterator state: (assignment position, inner position).
-        pos = [0] * len(assignments)
-        inner = [0] * len(assignments)
-        active = [len(a) > 0 for a in assignments]
-        emitted_q = [False] * len(assignments)
-        while any(active):
-            for w, assign in enumerate(assignments):
-                if not active[w]:
-                    continue
-                q_tile = assign[pos[w]]
-                local_iter = pos[w]
-                n = self.kv_range(q_tile)
-                if not emitted_q[w]:
-                    yield (w, "Q", q_tile)
-                    emitted_q[w] = True
-                j = inner[w]
-                kv = kv_index_host(self.order, local_iter, j, n)
-                yield (w, "K", kv)
-                yield (w, "V", kv)
-                inner[w] += 1
-                if inner[w] >= n:
-                    yield (w, "O", q_tile)
-                    inner[w] = 0
-                    emitted_q[w] = False
-                    pos[w] += 1
-                    if pos[w] >= len(assign):
-                        active[w] = False
+        yield from self.traversal.wavefront(n_workers)
 
     def flat_trace(self, n_workers: int = 1) -> list[tuple[str, int]]:
         """Trace without worker ids (cache sees the interleaved stream)."""
@@ -257,9 +672,10 @@ class KVSchedule:
             n_q=self.n_q,
             n_kv=self.n_kv,
             causal=self.causal,
-            window=window,
+            window=self.window if window is None else window,
             q_block=self.q_block,
             kv_block=self.kv_block,
+            snake_group=self.snake_group,
         )
 
 
@@ -272,10 +688,11 @@ class BwdKVSchedule:
     (Q, dO, plus the per-row LSE/delta vectors). The cyclic-traversal L2
     pathology the paper targets therefore reappears on the Q stream —
     every KV tile revisits the full sweep of Q tiles — and the same
-    sawtooth reordering applies, with parity keyed on the worker-local
-    resident (KV-tile) counter. Causal masking trims the *low* end of the
-    Q range per KV tile (the transpose of the forward's high-end trim);
-    a sliding window trims the high end.
+    reordering applies, with parity keyed on the worker-local resident
+    (KV-tile) counter. Causal masking trims the *low* end of the Q range
+    per KV tile (the transpose of the forward's high-end trim); a sliding
+    window trims the high end. Like :class:`KVSchedule`, a host wavefront
+    model over the shared :class:`Traversal` arithmetic.
     """
 
     order: Order
@@ -285,11 +702,25 @@ class BwdKVSchedule:
     window: Optional[int] = None
     q_block: int = 128
     kv_block: int = 128
+    snake_group: Optional[int] = None
 
     def __post_init__(self):
         object.__setattr__(self, "order", Order.parse(self.order))
         if self.n_q <= 0 or self.n_kv <= 0:
             raise ValueError(f"empty schedule: n_q={self.n_q} n_kv={self.n_kv}")
+
+    @property
+    def traversal(self) -> Traversal:
+        return Traversal(
+            order=self.order,
+            n_q=self.n_q,
+            n_kv=self.n_kv,
+            causal=self.causal,
+            window=self.window,
+            q_block=self.q_block,
+            kv_block=self.kv_block,
+            snake_group=self.snake_group,
+        )
 
     # ---- per-worker iteration ------------------------------------------------
 
@@ -305,60 +736,29 @@ class BwdKVSchedule:
 
     def q_range(self, kv_tile: int) -> int:
         lo, hi = self.q_bounds(kv_tile)
-        return hi - lo + 1
+        return max(hi - lo + 1, 0)
 
     def q_order(self, kv_tile: int, local_iter: int | None = None) -> list[int]:
         """The sequence of Q tile ids streamed while parked on ``kv_tile``."""
-        li = kv_tile if local_iter is None else local_iter
-        lo, hi = self.q_bounds(kv_tile)
-        n = hi - lo + 1
-        return [lo + kv_index_host(self.order, li, j, n) for j in range(n)]
+        return self.traversal.q_order(kv_tile, local_iter)
 
     # ---- global traces (cache simulation) ------------------------------------
 
     def worker_assignments(self, n_workers: int) -> list[list[int]]:
         """Round-robin KV-tile assignment (the resident tile of this grid)."""
-        if n_workers <= 0:
-            raise ValueError("n_workers must be positive")
-        return [list(range(w, self.n_kv, n_workers)) for w in range(n_workers)]
+        return self.traversal.worker_assignments(n_workers, transposed=True)
 
     def wavefront_trace(self, n_workers: int) -> Iterator[tuple[int, str, int]]:
         """Lock-step wavefront trace of the dK/dV grid.
 
         Tensors: 'K','V' once per resident KV tile, 'Q','dO' per inner
-        step (Q-stream tile ids), 'dK','dV' written at tile end. Sawtooth
-        parity is the worker-local resident counter, mirroring
+        step (Q-stream tile ids), 'dK','dV' written at tile end. Parity is
+        the worker-local resident counter, mirroring
         :meth:`KVSchedule.wavefront_trace`.
         """
-        assignments = self.worker_assignments(n_workers)
-        pos = [0] * len(assignments)
-        inner = [0] * len(assignments)
-        active = [len(a) > 0 for a in assignments]
-        emitted_kv = [False] * len(assignments)
-        while any(active):
-            for w, assign in enumerate(assignments):
-                if not active[w]:
-                    continue
-                kv_tile = assign[pos[w]]
-                local_iter = pos[w]
-                lo, hi = self.q_bounds(kv_tile)
-                n = hi - lo + 1
-                if not emitted_kv[w]:
-                    yield (w, "K", kv_tile)
-                    yield (w, "V", kv_tile)
-                    emitted_kv[w] = True
-                qt = lo + kv_index_host(self.order, local_iter, inner[w], n)
-                yield (w, "Q", qt)
-                yield (w, "dO", qt)
-                inner[w] += 1
-                if inner[w] >= n:
-                    yield (w, "dK", kv_tile)
-                    yield (w, "dV", kv_tile)
-                    inner[w] = 0
-                    emitted_kv[w] = False
-                    pos[w] += 1
-                    if pos[w] >= len(assign):
-                        active[w] = False
+        for w, tensor, key in self.traversal.wavefront(n_workers, transposed=True):
+            # G=1 here: unwrap the (group, q_tile) stream keys to plain ids.
+            yield (w, tensor, key[1] if tensor in ("Q", "dO") else key)
 
     def flat_trace(self, n_workers: int = 1) -> list[tuple[str, int]]:
         return [(t, tile) for (_, t, tile) in self.wavefront_trace(n_workers)]
@@ -373,6 +773,7 @@ def bwd_kv_schedule(
     window: Optional[int] = None,
     q_block: int = 128,
     kv_block: int = 128,
+    snake_group: Optional[int] = None,
 ) -> BwdKVSchedule:
     """Build the transposed (dK/dV) schedule directly from grid geometry."""
     return BwdKVSchedule(
@@ -383,6 +784,7 @@ def bwd_kv_schedule(
         window=window,
         q_block=q_block,
         kv_block=kv_block,
+        snake_group=snake_group,
     )
 
 

@@ -1,13 +1,18 @@
 """Pallas TPU flash-attention kernels with schedulable KV traversal.
 
 The paper's Sawtooth Wavefront Reordering (Alg. 4) is expressed *entirely in
-the BlockSpec index_map*: the kernel bodies are identical for cyclic and
-sawtooth. On TPU the schedule controls the HBM->VMEM DMA stream of the
-Pallas software pipeline; consecutive grid steps that map to the same block
-elide the copy, so the sawtooth boundary block (last block of pass i ==
-first block of pass i+1) is fetched once instead of twice, and the mean HBM
-reuse distance of the streamed operand halves (see kernels/traffic.py for
-the counting model and DESIGN.md §2 for the GB10->TPU adaptation).
+the BlockSpec index_map*: the kernel bodies are identical for every
+traversal order. The index arithmetic itself is not owned here — each
+launch compiles a ``repro.core.schedule.Traversal`` and consumes its traced
+lowerings (``kv_block_index`` for the forward/dQ grid,
+``stream_block_index`` for the transposed dK/dV grid), so the kernels, the
+blockwise XLA path, the traffic models, and the cache simulator all share
+one source of truth for the order (``block_snake`` included). On TPU the
+traversal controls the HBM->VMEM DMA stream of the Pallas software
+pipeline; consecutive grid steps that map to the same block elide the copy,
+so the sawtooth boundary block (last block of pass i == first block of pass
+i+1) is fetched once instead of twice (see kernels/traffic.py for the
+counting model and DESIGN.md §2/§3 for the GB10->TPU adaptation and the IR).
 
 Forward dataflow is the paper's split-Q (Alg. 1): the Q tile is resident
 (one per grid row), K/V tiles stream. Causal and sliding-window ranges are
@@ -22,12 +27,11 @@ study) is three kernels consuming the forward's saved ``(o, lse)``:
   * ``_dq_kernel``         — the forward grid (Q resident, KV streamed);
   * ``_dkv_kernel``        — the *transposed* grid: each KV tile is
     resident (accumulating dK/dV) and the Q-side operands (Q, dO, lse,
-    delta) stream — exactly the cyclic-traversal reuse pathology sawtooth
-    targets, now on the Q stream. The whole per-resident stream (all GQA
-    groups over the trimmed Q range) is one sweep, reversed as a unit with
-    parity keyed on the resident KV-tile counter, so the boundary block is
-    elided across every sweep transition. ``core.schedule.BwdKVSchedule``
-    is the host-side (G=1) model of this grid.
+    delta) stream — exactly the cyclic-traversal reuse pathology the
+    reordering targets, now on the Q stream. The whole per-resident stream
+    (all GQA groups over the trimmed Q range) is one sweep, reordered as
+    one range with parity keyed on the resident KV-tile counter.
+    ``core.schedule.BwdKVSchedule`` is the host-side (G=1) model.
 
 Layout: q (B, Sq, Hq, D), k/v (B, Skv, Hkv, D), GQA folded by stacking the
 ``G = Hq // Hkv`` query groups along the row axis per KV head.
@@ -53,97 +57,12 @@ except ImportError:  # pragma: no cover
     pltpu = None
     _CompilerParams = None
 
-from repro.core.schedule import Order
+from repro.core.schedule import Order, Traversal
 
 __all__ = ["flash_attention_fwd", "flash_attention_bwd", "MASK_VALUE"]
 
 MASK_VALUE = -0.7 * float(np.finfo(np.float32).max)
 LANES = 128
-
-
-# --------------------------------------------------------------------------
-# shared index arithmetic (the schedule, as index_map math)
-# --------------------------------------------------------------------------
-
-
-def _kv_bounds(i, *, nq, nkv, q_block, kv_block, causal, window):
-    """Inclusive [lo, hi] KV-block range visible to q-tile row ``i``.
-
-    ``i`` indexes the G-folded q tiles; the sequence tile is ``i % nq``.
-    Returns traced int32 scalars.
-    """
-    q_tile = jax.lax.rem(i, nq)
-    if causal:
-        last_row = q_tile * q_block + (q_block - 1)
-        hi = jnp.minimum(nkv - 1, last_row // kv_block)
-    else:
-        hi = jnp.int32(nkv - 1)
-    if window is not None:
-        first_visible = jnp.maximum(q_tile * q_block - (window - 1), 0)
-        lo = first_visible // kv_block
-    else:
-        lo = jnp.int32(0)
-    return lo, hi
-
-
-def _kv_block_index(order: Order, i, j, *, nq, nkv, q_block, kv_block, causal, window):
-    """KV block fetched at grid step (i, j) plus the compute-valid predicate."""
-    lo, hi = _kv_bounds(
-        i, nq=nq, nkv=nkv, q_block=q_block, kv_block=kv_block, causal=causal, window=window
-    )
-    steps = hi - lo + 1
-    jc = jnp.minimum(j, steps - 1)  # clamp out-of-range steps to boundary
-    fwd = lo + jc
-    if order is Order.SAWTOOTH:
-        bwd = hi - jc
-        jj = jax.lax.select(jax.lax.rem(i, 2) == 0, fwd, bwd)
-    else:
-        jj = fwd
-    valid = j < steps
-    return jj, valid
-
-
-def _q_bounds(jkv, *, nq, q_block, kv_block, causal, window):
-    """Inclusive [lo, hi] Q-tile range touching KV tile ``jkv`` (transposed
-    trimming for the dK/dV grid — host model: schedule.q_tile_bounds_for)."""
-    if causal:
-        lo = (jkv * kv_block) // q_block
-    else:
-        lo = jnp.int32(0)
-    if window is not None:
-        last_row = (jkv + 1) * kv_block + (window - 2)
-        hi = jnp.minimum(nq - 1, last_row // q_block)
-    else:
-        hi = jnp.int32(nq - 1)
-    return lo, hi
-
-
-def _stream_index(order: Order, jkv, u, *, g, nq, q_block, kv_block, causal, window):
-    """(group, Q tile) streamed at dK/dV grid step (jkv, u) + valid predicate.
-
-    The whole per-resident stream — all G query groups over the trimmed Q
-    range — is linearized into one sweep of ``g * steps`` steps and
-    reversed *as a unit* on odd resident (KV-tile) counters, so the
-    boundary block of sweep jkv (same group, same Q tile) is re-fetched
-    first by sweep jkv+1 and the Pallas pipeline elides its copy. This is
-    the exact transpose of the forward sawtooth; ``core.schedule.
-    BwdKVSchedule`` is the host-side (G=1) model.
-    """
-    lo, hi = _q_bounds(
-        jkv, nq=nq, q_block=q_block, kv_block=kv_block, causal=causal, window=window
-    )
-    steps = hi - lo + 1
-    total = g * steps
-    uc = jnp.minimum(u, total - 1)  # clamp out-of-range steps to boundary
-    if order is Order.SAWTOOTH:
-        rev = (total - 1) - uc
-        uu = jax.lax.select(jax.lax.rem(jkv, 2) == 0, uc, rev)
-    else:
-        uu = uc
-    gg = uu // steps
-    qi = lo + jax.lax.rem(uu, steps)
-    valid = u < total
-    return gg, qi, valid
 
 
 def _tile_mask(q_tile, jj, *, q_block, kv_block, causal, window, kv_len):
@@ -156,6 +75,16 @@ def _tile_mask(q_tile, jj, *, q_block, kv_block, causal, window, kv_len):
     if window is not None:
         ok &= cols > rows - window
     return ok
+
+
+def _tr_mask_kwargs(tr: Traversal, kv_len: int) -> dict:
+    return dict(
+        q_block=tr.q_block,
+        kv_block=tr.kv_block,
+        causal=tr.causal,
+        window=tr.window,
+        kv_len=kv_len,
+    )
 
 
 # --------------------------------------------------------------------------
@@ -215,13 +144,7 @@ def _fwd_kernel(
     v_ref,
     o_ref,
     *rest,
-    order: Order,
-    nq: int,
-    nkv: int,
-    q_block: int,
-    kv_block: int,
-    causal: bool,
-    window: Optional[int],
+    tr: Traversal,
     kv_len: int,
     scale: float,
     emit_lse: bool,
@@ -230,17 +153,7 @@ def _fwd_kernel(
     m_scr, l_scr, acc_scr = rest[-3:]
     i = pl.program_id(1)
     j = pl.program_id(2)
-    jj, valid = _kv_block_index(
-        order,
-        i,
-        j,
-        nq=nq,
-        nkv=nkv,
-        q_block=q_block,
-        kv_block=kv_block,
-        causal=causal,
-        window=window,
-    )
+    jj, valid = tr.kv_block_index(i, j)
 
     @pl.when(j == 0)
     def _init():
@@ -260,20 +173,17 @@ def _fwd_kernel(
             * scale
         )  # (qb, kb)
 
-        q_tile = jax.lax.rem(i, nq)
-        ok = _tile_mask(
-            q_tile, jj, q_block=q_block, kv_block=kv_block,
-            causal=causal, window=window, kv_len=kv_len,
-        )
+        q_tile = jax.lax.rem(i, tr.n_q)
+        ok = _tile_mask(q_tile, jj, **_tr_mask_kwargs(tr, kv_len))
         s = jnp.where(ok, s, MASK_VALUE)
 
         m_prev = m_scr[:, :1]
         l_prev = l_scr[:, :1]
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
-        # Explicit mask on p: with sawtooth-causal the *diagonal* block is
-        # visited first on odd passes, where early rows have no valid columns
-        # yet — exp(mask - mask) would poison l without this.
+        # Explicit mask on p: with a reversed-causal traversal the *diagonal*
+        # block can be visited first on odd passes, where early rows have no
+        # valid columns yet — exp(mask - mask) would poison l without this.
         p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m_prev - m_new)  # (qb, 1)
         l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
@@ -287,7 +197,7 @@ def _fwd_kernel(
         m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
         l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
 
-    @pl.when(j == nkv - 1)
+    @pl.when(j == tr.n_kv - 1)
     def _finalize():
         l = l_scr[:, :1]
         l = jnp.where(l == 0.0, 1.0, l)  # fully-masked (padding) rows
@@ -306,6 +216,7 @@ def _fwd_kernel(
         "scale",
         "q_block",
         "kv_block",
+        "snake_group",
         "interpret",
         "return_lse",
     ),
@@ -321,6 +232,7 @@ def flash_attention_fwd(
     scale: Optional[float] = None,
     q_block: int = 256,
     kv_block: int = 256,
+    snake_group: Optional[int] = None,
     interpret: bool = False,
     return_lse: bool = False,
 ) -> jax.Array:
@@ -329,6 +241,7 @@ def flash_attention_fwd(
     With ``return_lse=True`` returns ``(o, lse)``; lse is the per-row
     log-sum-exp of the scaled scores, shape (B, Sq, Hq) f32 — the residual
     the fused backward consumes instead of recomputing the forward.
+    ``snake_group`` sizes the ``block_snake`` reversal window (KV tiles).
     """
     order = Order.parse(order)
     b, sq, hq, d = q.shape
@@ -347,24 +260,27 @@ def flash_attention_fwd(
     nkv = skv_p // kv_block
     dp = kf.shape[2]
 
-    kv_map_kwargs = dict(
-        nq=nq, nkv=nkv, q_block=q_block, kv_block=kv_block, causal=causal, window=window
+    tr = Traversal(
+        order=order,
+        n_q=nq,
+        n_kv=nkv,
+        causal=causal,
+        window=window,
+        q_block=q_block,
+        kv_block=kv_block,
+        n_groups=g,
+        snake_group=snake_group,
     )
 
     def q_map(bh, i, j):
         return (bh, i, 0)
 
     def kv_map(bh, i, j):
-        jj, _ = _kv_block_index(order, i, j, **kv_map_kwargs)
+        jj, _ = tr.kv_block_index(i, j)
         return (bh, jj, 0)
 
     kernel = functools.partial(
-        _fwd_kernel,
-        order=order,
-        kv_len=skv,
-        scale=scale_,
-        emit_lse=return_lse,
-        **kv_map_kwargs,
+        _fwd_kernel, tr=tr, kv_len=skv, scale=scale_, emit_lse=return_lse
     )
 
     grid = (b * hkv, g * nq, nkv)
@@ -436,23 +352,13 @@ def _dq_kernel(
     dq_ref,
     dq_scr,
     *,
-    order: Order,
-    nq: int,
-    nkv: int,
-    q_block: int,
-    kv_block: int,
-    causal: bool,
-    window: Optional[int],
+    tr: Traversal,
     kv_len: int,
     scale: float,
 ):
     i = pl.program_id(1)
     j = pl.program_id(2)
-    jj, valid = _kv_block_index(
-        order, i, j,
-        nq=nq, nkv=nkv, q_block=q_block, kv_block=kv_block,
-        causal=causal, window=window,
-    )
+    jj, valid = tr.kv_block_index(i, j)
 
     @pl.when(j == 0)
     def _init():
@@ -472,11 +378,8 @@ def _dq_kernel(
             )
             * scale
         )
-        q_tile = jax.lax.rem(i, nq)
-        ok = _tile_mask(
-            q_tile, jj, q_block=q_block, kv_block=kv_block,
-            causal=causal, window=window, kv_len=kv_len,
-        )
+        q_tile = jax.lax.rem(i, tr.n_q)
+        ok = _tile_mask(q_tile, jj, **_tr_mask_kwargs(tr, kv_len))
         # exp(s - lse) is the *normalized* P (lse = m + log l) — masked
         # explicitly so padded/fully-masked rows can't poison the grads.
         p = jnp.where(ok, jnp.exp(s - lse_row), 0.0)
@@ -489,7 +392,7 @@ def _dq_kernel(
             preferred_element_type=jnp.float32,
         )
 
-    @pl.when(j == nkv - 1)
+    @pl.when(j == tr.n_kv - 1)
     def _finalize():
         dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
 
@@ -511,24 +414,13 @@ def _dkv_kernel(
     dk_scr,
     dv_scr,
     *,
-    order: Order,
-    g: int,
-    nq: int,
-    nkv: int,
-    q_block: int,
-    kv_block: int,
-    causal: bool,
-    window: Optional[int],
+    tr: Traversal,
     kv_len: int,
     scale: float,
 ):
     jkv = pl.program_id(1)
     u = pl.program_id(2)
-    _, qi, valid = _stream_index(
-        order, jkv, u,
-        g=g, nq=nq, q_block=q_block, kv_block=kv_block,
-        causal=causal, window=window,
-    )
+    _, qi, valid = tr.stream_block_index(jkv, u)
 
     @pl.when(u == 0)
     def _init():
@@ -549,10 +441,7 @@ def _dkv_kernel(
             )
             * scale
         )  # (qb, kb)
-        ok = _tile_mask(
-            qi, jkv, q_block=q_block, kv_block=kv_block,
-            causal=causal, window=window, kv_len=kv_len,
-        )
+        ok = _tile_mask(qi, jkv, **_tr_mask_kwargs(tr, kv_len))
         p = jnp.where(ok, jnp.exp(s - lse_row), 0.0)
         # dV += P^T @ dO  (contract the q rows)
         dv_scr[...] += jax.lax.dot_general(
@@ -569,7 +458,7 @@ def _dkv_kernel(
             preferred_element_type=jnp.float32,
         )
 
-    @pl.when(u == g * nq - 1)
+    @pl.when(u == tr.grid_rows - 1)
     def _finalize():
         dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
         dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
@@ -584,6 +473,7 @@ def _dkv_kernel(
         "scale",
         "q_block",
         "kv_block",
+        "snake_group",
         "interpret",
     ),
 )
@@ -601,15 +491,16 @@ def flash_attention_bwd(
     scale: Optional[float] = None,
     q_block: int = 256,
     kv_block: int = 256,
+    snake_group: Optional[int] = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused Pallas flash backward from saved ``(o, lse)`` residuals.
 
     Launches the delta preprocess, the dQ kernel (forward grid) and the
-    dK/dV kernel (transposed grid), all traversed per ``order``. No forward
-    recompute: the normalized probabilities are recovered as
-    ``exp(s - lse)``. Block sizes may differ from the forward's (they are
-    autotuned separately — benchmarks/hillclimb.py).
+    dK/dV kernel (transposed grid), all traversed per the compiled
+    ``Traversal``. No forward recompute: the normalized probabilities are
+    recovered as ``exp(s - lse)``. Block sizes may differ from the
+    forward's (they are autotuned separately — benchmarks/hillclimb.py).
     """
     order = Order.parse(order)
     b, sq, hq, d = q.shape
@@ -629,6 +520,18 @@ def flash_attention_bwd(
     skv_p = kf.shape[1]
     nkv = skv_p // kv_block
     dp = kf.shape[2]
+
+    tr = Traversal(
+        order=order,
+        n_q=nq,
+        n_kv=nkv,
+        causal=causal,
+        window=window,
+        q_block=q_block,
+        kv_block=kv_block,
+        n_groups=g,
+        snake_group=snake_group,
+    )
 
     # lse/delta stream lane-replicated as (q_block, LANES) f32 tiles — the
     # upstream JAX TPU flash-bwd residual layout: Mosaic has no cheap
@@ -663,22 +566,16 @@ def flash_attention_bwd(
         **interp,
     )(of, dof)
 
-    kv_map_kwargs = dict(
-        nq=nq, nkv=nkv, q_block=q_block, kv_block=kv_block, causal=causal, window=window
-    )
-
     # ---- dQ: forward grid ----------------------------------------------------
     def q_map3(bh, i, j):
         return (bh, i, 0)
 
     def kv_map3(bh, i, j):
-        jj, _ = _kv_block_index(order, i, j, **kv_map_kwargs)
+        jj, _ = tr.kv_block_index(i, j)
         return (bh, jj, 0)
 
     dqf = pl.pallas_call(
-        functools.partial(
-            _dq_kernel, order=order, kv_len=skv, scale=scale_, **kv_map_kwargs
-        ),
+        functools.partial(_dq_kernel, tr=tr, kv_len=skv, scale=scale_),
         grid=(b * hkv, g * nq, nkv),
         in_specs=[
             pl.BlockSpec((1, q_block, dp), q_map3),
@@ -696,21 +593,15 @@ def flash_attention_bwd(
     )(qf, kf, vf, dof, lse_f, delta_f)
 
     # ---- dK/dV: transposed grid ---------------------------------------------
-    q_idx_kwargs = dict(
-        g=g, nq=nq, q_block=q_block, kv_block=kv_block, causal=causal, window=window
-    )
-
     def stream_map(bh, jkv, u):
-        gg, qi, _ = _stream_index(order, jkv, u, **q_idx_kwargs)
+        gg, qi, _ = tr.stream_block_index(jkv, u)
         return (bh, gg * nq + qi, 0)
 
     def resident_map(bh, jkv, u):
         return (bh, jkv, 0)
 
     dkf, dvf = pl.pallas_call(
-        functools.partial(
-            _dkv_kernel, order=order, nkv=nkv, kv_len=skv, scale=scale_, **q_idx_kwargs
-        ),
+        functools.partial(_dkv_kernel, tr=tr, kv_len=skv, scale=scale_),
         grid=(b * hkv, nkv, g * nq),
         in_specs=[
             pl.BlockSpec((1, q_block, dp), stream_map),

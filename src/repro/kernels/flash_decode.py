@@ -37,18 +37,10 @@ except ImportError:  # pragma: no cover
     pltpu = None
     _CompilerParams = None
 
-from repro.core.schedule import Order, page_visit_order
+from repro.core.schedule import Order, Traversal, kv_index
 from repro.kernels.flash_attention import MASK_VALUE, LANES, _pad_axis
 
 __all__ = ["flash_decode_fwd", "paged_flash_decode_fwd"]
-
-
-def _chunk_index(order: Order, bh, c, n_chunks: int):
-    if order is Order.SAWTOOTH:
-        return jax.lax.select(
-            jax.lax.rem(bh, 2) == 0, c, (n_chunks - 1) - c
-        )
-    return c
 
 
 def _decode_step(q, k, v, ok, o_ref, m_scr, l_scr, acc_scr, *, c, n_chunks, scale):
@@ -156,6 +148,7 @@ def flash_decode_fwd(
     window: Optional[int] = None,
     scale: Optional[float] = None,
     chunk: int = 512,
+    snake_group: Optional[int] = None,
     interpret: bool = False,
     block_table: Optional[jax.Array] = None,
 ) -> jax.Array:
@@ -175,6 +168,7 @@ def flash_decode_fwd(
             order=order,
             window=window,
             scale=scale,
+            snake_group=snake_group,
             interpret=interpret,
         )
     return _flash_decode_contiguous(
@@ -186,13 +180,14 @@ def flash_decode_fwd(
         window=window,
         scale=scale,
         chunk=chunk,
+        snake_group=snake_group,
         interpret=interpret,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("order", "window", "scale", "chunk", "interpret"),
+    static_argnames=("order", "window", "scale", "chunk", "snake_group", "interpret"),
 )
 def _flash_decode_contiguous(
     q: jax.Array,
@@ -204,6 +199,7 @@ def _flash_decode_contiguous(
     window: Optional[int],
     scale: Optional[float],
     chunk: int,
+    snake_group: Optional[int],
     interpret: bool,
 ) -> jax.Array:
     b, one, hq, d = q.shape
@@ -237,14 +233,18 @@ def _flash_decode_contiguous(
     dp = kf.shape[2]
     n_chunks = kf.shape[1] // chunk
 
+    # The chunk walk derives from the same IR as every other consumer:
+    # kv_index over n_chunks with the (batch*kv-head) grid row as the parity
+    # driver (contiguous decode has no intrinsic cross-row reuse — DESIGN.md
+    # §2 — so the toggle is for symmetry and measurement).
     def q_map(bh, c):
         return (bh, 0, 0)
 
     def kv_map(bh, c):
-        return (bh, _chunk_index(order, bh, c, n_chunks), 0)
+        return (bh, kv_index(order, bh, c, n_chunks, snake_group=snake_group), 0)
 
     def mask_map(bh, c):
-        return (bh // hkv, _chunk_index(order, bh, c, n_chunks))
+        return (bh // hkv, kv_index(order, bh, c, n_chunks, snake_group=snake_group))
 
     kernel = functools.partial(_decode_kernel, n_chunks=n_chunks, scale=scale_)
     compiler_params = None
@@ -279,7 +279,7 @@ def _flash_decode_contiguous(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("order", "window", "scale", "interpret"),
+    static_argnames=("order", "window", "scale", "snake_group", "interpret"),
 )
 def paged_flash_decode_fwd(
     q: jax.Array,
@@ -291,17 +291,19 @@ def paged_flash_decode_fwd(
     order: Order | str = Order.CYCLIC,
     window: Optional[int] = None,
     scale: Optional[float] = None,
+    snake_group: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Paged decode: q (B,1,Hq,D); pools (n_pages, page, Hkv, D).
 
     The schedule is folded into the operands before the kernel launches:
-    ``page_visit_order`` (sawtooth parity = cache_len, so consecutive decode
-    steps reverse direction) gives each row's logical visit order, the block
-    table maps it to physical pool pages, and that (B, n_blocks) physical id
-    array is the scalar-prefetch operand the KV ``index_map`` reads — the
-    classic TPU paged-attention pattern. The validity mask is pre-gathered
-    into the same visit order so mask chunk c always matches KV chunk c.
+    the compiled ``Traversal``'s ``visit_order`` lowering (sawtooth parity
+    = cache_len, so consecutive decode steps reverse direction) gives each
+    row's logical visit order, the block table maps it to physical pool
+    pages, and that (B, n_blocks) physical id array is the scalar-prefetch
+    operand the KV ``index_map`` reads — the classic TPU paged-attention
+    pattern. The validity mask is pre-gathered into the same visit order so
+    mask chunk c always matches KV chunk c.
     """
     order = Order.parse(order)
     b, one, hq, d = q.shape
@@ -311,8 +313,12 @@ def paged_flash_decode_fwd(
     g = hq // hkv
     scale_ = float(d**-0.5 if scale is None else scale)
 
+    tr = Traversal(
+        order=order, n_q=1, n_kv=n_blocks, q_block=1, kv_block=page,
+        snake_group=snake_group,
+    )
     lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
-    visit = page_visit_order(order, lens, n_blocks)  # (B, n_blocks) logical
+    visit = tr.visit_order(lens)  # (B, n_blocks) logical
     phys = jnp.take_along_axis(block_table.astype(jnp.int32), visit, axis=1)
 
     # Validity mask per logical position, gathered into visit order.

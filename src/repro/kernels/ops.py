@@ -49,7 +49,7 @@ def _resolve(impl: Impl) -> str:
 
 def _fwd_dispatch(
     q, k, v, *, impl, order, causal, window, scale, q_block, kv_block, score_dtype,
-    return_lse=False,
+    snake_group, return_lse=False,
 ):
     impl = _resolve(impl)
     if impl in ("pallas", "pallas_interpret"):
@@ -63,6 +63,7 @@ def _fwd_dispatch(
             scale=scale,
             q_block=q_block,
             kv_block=kv_block,
+            snake_group=snake_group,
             interpret=(impl == "pallas_interpret"),
             return_lse=return_lse,
         )
@@ -78,6 +79,7 @@ def _fwd_dispatch(
             q_block=q_block,
             kv_block=kv_block,
             score_dtype=score_dtype,
+            snake_group=snake_group,
             return_lse=return_lse,
         )
     if impl == "reference":
@@ -92,7 +94,7 @@ def _fwd_dispatch(
 @functools.lru_cache(maxsize=None)
 def _make_attention(
     impl, order, causal, window, scale, q_block, kv_block, score_dtype,
-    bwd_q_block, bwd_kv_block,
+    bwd_q_block, bwd_kv_block, snake_group,
 ):
     """Build a custom_vjp attention fn for one static configuration."""
 
@@ -105,6 +107,7 @@ def _make_attention(
         q_block=q_block,
         kv_block=kv_block,
         score_dtype=score_dtype,
+        snake_group=snake_group,
     )
     bqb = bwd_q_block or q_block
     bkb = bwd_kv_block or kv_block
@@ -124,6 +127,7 @@ def _make_attention(
             q_block=q_block,
             kv_block=kv_block,
             score_dtype=score_dtype,
+            snake_group=snake_group,
         )
 
     @jax.custom_vjp
@@ -149,6 +153,7 @@ def _make_attention(
                 scale=scale,
                 q_block=bqb,
                 kv_block=bkb,
+                snake_group=snake_group,
                 interpret=(r == "pallas_interpret"),
             )
         if r == "xla":
@@ -161,6 +166,7 @@ def _make_attention(
                 q_block=bqb,
                 kv_block=bkb,
                 score_dtype=score_dtype,
+                snake_group=snake_group,
             )
         if r == "reference":
             _, vjp = jax.vjp(
@@ -193,6 +199,7 @@ def attention(
     score_dtype: str = "float32",
     bwd_q_block: Optional[int] = None,
     bwd_kv_block: Optional[int] = None,
+    snake_group: Optional[int] = None,
 ) -> jax.Array:
     """Flash attention, layout (B, S, H, D); GQA via Hq > Hkv.
 
@@ -200,12 +207,13 @@ def attention(
     tiles (default: the forward blocks) — the backward's working set is
     larger (Q, dO, lse, delta stream against a resident dK/dV accumulator),
     so its optimum is usually smaller; benchmarks/hillclimb.py autotunes
-    them separately.
+    them separately. ``snake_group`` sizes the ``block_snake`` order's
+    reversal window (KV tiles); ignored by the other orders.
     """
     order = Order.parse(order)
     fn = _make_attention(
         impl, order, causal, window, scale, q_block, kv_block, score_dtype,
-        bwd_q_block, bwd_kv_block,
+        bwd_q_block, bwd_kv_block, snake_group,
     )
     return fn(q, k, v)
 
@@ -222,6 +230,7 @@ def attention_decode(
     chunk: int = 512,
     impl: Impl = "auto",
     block_table: Optional[jax.Array] = None,
+    snake_group: Optional[int] = None,
 ) -> jax.Array:
     """Single-token decode attention vs a KV cache. Not differentiated.
 
@@ -241,6 +250,7 @@ def attention_decode(
             window=window,
             scale=scale,
             chunk=chunk,
+            snake_group=snake_group,
             interpret=(impl == "pallas_interpret"),
             block_table=block_table,
         )
@@ -254,6 +264,7 @@ def attention_decode(
             scale=scale,
             block_table=block_table,
             order=order,
+            snake_group=snake_group,
         )
     raise ValueError(f"unknown decode impl: {impl!r}")
 

@@ -1,11 +1,24 @@
-"""HBM->VMEM traffic model for the Pallas flash kernels (TPU analogue of §3.2).
+"""HBM->VMEM traffic models for the Pallas flash kernels (TPU analogue of §3.2).
 
 The Pallas TPU pipeline elides the copy for an operand whose block index is
-unchanged between consecutive grid steps ("revisiting"). This module replays
-the kernel grids host-side with the exact index_map arithmetic and counts
-fetched bytes per operand — the TPU-native equivalent of the paper's L2
-sector-access model, and the quantity sawtooth reduces structurally (the
-pass-boundary block is always elided).
+unchanged between consecutive grid steps ("revisiting"). This module hosts
+two model families, both lowered from the same compiled
+``repro.core.schedule.Traversal`` the kernels consume:
+
+* the **pipeline replays** (``pipeline_traffic``/``bwd_dq_traffic``/
+  ``bwd_dkv_traffic``) walk ``fwd_grid_steps``/``stream_grid_steps`` — the
+  exact index_map arithmetic, *global-row* parity included — so these byte
+  counts cannot drift from the kernels; they are the TPU-native equivalent
+  of the paper's L2 sector-access model, and the quantity sawtooth reduces
+  structurally (the pass-boundary block is always elided);
+* the **LLC wavefront models** (``fwd_llc_model``/``bwd_dkv_llc_model``)
+  replay ``Traversal.wavefront`` — the paper's persistent-worker execution
+  model (Alg. 2 round-robin, §3.4 lock-step, Alg. 4 *worker-local* parity)
+  — through a finite shared LRU. Note the deliberate parity difference:
+  the Pallas index_maps key direction on the global row id (a proxy that
+  matches the worker-local counter only when worker count and row parity
+  align), while these models keep the paper's per-worker counter; they
+  model the GB10-style shared-LLC wavefront, not the TPU DMA stream.
 
 Backward grids: the dQ kernel reuses the forward grid (KV streamed), so its
 traffic is the forward replay with the extra dO/lse/delta reads and the dQ
@@ -16,6 +29,14 @@ the transposed wavefront (``core.schedule.BwdKVSchedule``) through the LRU
 simulator with a finite shared buffer (CMEM on v4, or "what if TPUs had a
 GB10-style LLC"), which is where the paper-style ~50% non-compulsory miss
 reduction shows up and what the ≥30% acceptance test asserts.
+
+``fwd_llc_model`` is the per-order forward-grid counterpart and the place
+``block_snake`` earns its keep: causal trimming gives the round-robin
+workers different pass lengths, so the lock-step wavefront *desynchronizes*
+— under sawtooth, desynchronized workers sweep the full KV range in
+opposite directions and the shared buffer thrashes, while block_snake keeps
+every worker's reversal inside a ``snake_group``-tile window, bounding the
+concurrent footprint so it can be sized to the modeled LLC capacity.
 """
 
 from __future__ import annotations
@@ -23,7 +44,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core.schedule import Order, bwd_kv_schedule, q_tile_bounds_for
+from repro.core.schedule import Order, Traversal
 
 __all__ = [
     "FlashGridSpec",
@@ -33,6 +54,7 @@ __all__ = [
     "bwd_dq_traffic",
     "bwd_dkv_traffic",
     "bwd_dkv_llc_model",
+    "fwd_llc_model",
 ]
 
 
@@ -58,6 +80,22 @@ class FlashGridSpec:
     def nkv(self) -> int:
         return -(-self.seq_kv // self.kv_block)
 
+    def traversal(
+        self, order: Order | str, snake_group: Optional[int] = None
+    ) -> Traversal:
+        """Compile the Traversal this launch's kernels would consume."""
+        return Traversal(
+            order=Order.parse(order),
+            n_q=self.nq,
+            n_kv=self.nkv,
+            causal=self.causal,
+            window=self.window,
+            q_block=self.q_block,
+            kv_block=self.kv_block,
+            n_groups=self.n_groups,
+            snake_group=snake_group,
+        )
+
 
 @dataclasses.dataclass
 class TrafficReport:
@@ -72,48 +110,30 @@ class TrafficReport:
         return self.q_bytes + self.kv_bytes + self.out_bytes
 
 
-def _kv_bounds_host(spec: FlashGridSpec, i: int) -> tuple[int, int]:
-    q_tile = i % spec.nq
-    if spec.causal:
-        last_row = q_tile * spec.q_block + (spec.q_block - 1)
-        hi = min(spec.nkv - 1, last_row // spec.kv_block)
-    else:
-        hi = spec.nkv - 1
-    if spec.window is not None:
-        lo = max(q_tile * spec.q_block - (spec.window - 1), 0) // spec.kv_block
-    else:
-        lo = 0
-    return lo, hi
-
-
-def _kv_block_host(spec: FlashGridSpec, order: Order, i: int, j: int) -> int:
-    lo, hi = _kv_bounds_host(spec, i)
-    jc = min(j, hi - lo)
-    return (lo + jc) if (order is Order.CYCLIC or i % 2 == 0) else (hi - jc)
-
-
-def pipeline_traffic(spec: FlashGridSpec, order: Order | str) -> TrafficReport:
+def pipeline_traffic(
+    spec: FlashGridSpec,
+    order: Order | str,
+    *,
+    snake_group: Optional[int] = None,
+) -> TrafficReport:
     """Count HBM bytes fetched under Pallas consecutive-revisit elision."""
-    order = Order.parse(order)
+    tr = spec.traversal(order, snake_group)
     rep = TrafficReport()
     q_tile_bytes = spec.q_block * spec.head_dim * spec.elem_bytes
     kv_tile_bytes = 2 * spec.kv_block * spec.head_dim * spec.elem_bytes  # K and V
     last_q = None
     last_kv = None
-    n_rows = spec.n_groups * spec.nq
-    for i in range(n_rows):
+    for i, jj, _valid in tr.fwd_grid_steps():
         if last_q != i:
             rep.q_bytes += q_tile_bytes
             rep.out_bytes += q_tile_bytes  # O written once per tile
             last_q = i
-        for j in range(spec.nkv):
-            jj = _kv_block_host(spec, order, i, j)
-            rep.total_kv_fetches += 1
-            if last_kv == jj:
-                rep.elided_kv_fetches += 1
-            else:
-                rep.kv_bytes += kv_tile_bytes
-                last_kv = jj
+        rep.total_kv_fetches += 1
+        if last_kv == jj:
+            rep.elided_kv_fetches += 1
+        else:
+            rep.kv_bytes += kv_tile_bytes
+            last_kv = jj
     return rep
 
 
@@ -148,68 +168,72 @@ def _row_vec_bytes(spec: FlashGridSpec) -> int:
     return spec.q_block * RESIDUAL_LANES * LSE_BYTES
 
 
-def bwd_dq_traffic(spec: FlashGridSpec, order: Order | str) -> BwdTrafficReport:
+def bwd_dq_traffic(
+    spec: FlashGridSpec,
+    order: Order | str,
+    *,
+    snake_group: Optional[int] = None,
+) -> BwdTrafficReport:
     """dQ kernel traffic: the forward grid (Q-side resident, K/V streamed).
 
     Per resident row: q + do + lse + delta fetched once, dq written once;
     K/V tiles stream with the same schedule/elision as the forward.
     """
-    order = Order.parse(order)
+    tr = spec.traversal(order, snake_group)
     rep = BwdTrafficReport()
     q_tile_bytes = spec.q_block * spec.head_dim * spec.elem_bytes
     kv_tile_bytes = 2 * spec.kv_block * spec.head_dim * spec.elem_bytes
+    last_q = None
     last_kv = None
-    for i in range(spec.n_groups * spec.nq):
-        rep.resident_bytes += 2 * q_tile_bytes + 2 * _row_vec_bytes(spec)
-        rep.write_bytes += q_tile_bytes
-        for j in range(spec.nkv):
-            jj = _kv_block_host(spec, order, i, j)
-            rep.total_stream_fetches += 1
-            if last_kv == jj:
-                rep.elided_stream_fetches += 1
-            else:
-                rep.stream_bytes += kv_tile_bytes
-                last_kv = jj
+    for i, jj, _valid in tr.fwd_grid_steps():
+        if last_q != i:
+            rep.resident_bytes += 2 * q_tile_bytes + 2 * _row_vec_bytes(spec)
+            rep.write_bytes += q_tile_bytes
+            last_q = i
+        rep.total_stream_fetches += 1
+        if last_kv == jj:
+            rep.elided_stream_fetches += 1
+        else:
+            rep.stream_bytes += kv_tile_bytes
+            last_kv = jj
     return rep
 
 
-def bwd_dkv_traffic(spec: FlashGridSpec, order: Order | str) -> BwdTrafficReport:
+def bwd_dkv_traffic(
+    spec: FlashGridSpec,
+    order: Order | str,
+    *,
+    snake_group: Optional[int] = None,
+) -> BwdTrafficReport:
     """dK/dV kernel traffic: the transposed grid (KV resident, Q streamed).
 
     Each resident KV tile streams one linearized sweep — all GQA groups
     over the trimmed Q range — of q + do + lse + delta bundles; K/V are
     fetched and dK/dV written once per KV tile. Sawtooth reverses the whole
-    sweep on odd resident counters (``_stream_index`` in
-    kernels/flash_attention.py), so the sweep-boundary bundle is elided at
-    every KV-tile transition, GQA included.
+    sweep on odd resident counters (``Traversal.stream_block_index``), so
+    the sweep-boundary bundle is elided at every KV-tile transition, GQA
+    included; block_snake reverses within ``snake_group``-sized windows of
+    the sweep instead.
     """
-    order = Order.parse(order)
+    tr = spec.traversal(order, snake_group)
     rep = BwdTrafficReport()
     q_tile_bytes = spec.q_block * spec.head_dim * spec.elem_bytes
     kv_tile_bytes = 2 * spec.kv_block * spec.head_dim * spec.elem_bytes
     stream_bytes = 2 * q_tile_bytes + 2 * _row_vec_bytes(spec)  # q+do+lse+delta
-    nq = spec.nq
-    g = spec.n_groups
+    last_resident = None
     last_stream = None
-    for jkv in range(spec.nkv):
-        rep.resident_bytes += kv_tile_bytes
-        rep.write_bytes += kv_tile_bytes
-        lo, hi = q_tile_bounds_for(
-            jkv, nq,
-            causal=spec.causal, window=spec.window,
-            q_block=spec.q_block, kv_block=spec.kv_block,
-        )
-        n = hi - lo + 1
-        total = g * n
-        for u in range(total):
-            uu = (total - 1) - u if (order is Order.SAWTOOTH and jkv % 2 == 1) else u
-            key = (uu // n, lo + uu % n)  # (group, q tile)
-            rep.total_stream_fetches += 1
-            if last_stream == key:
-                rep.elided_stream_fetches += 1
-            else:
-                rep.stream_bytes += stream_bytes
-                last_stream = key
+    for jkv, gg, qi, _valid in tr.stream_grid_steps():
+        if last_resident != jkv:
+            rep.resident_bytes += kv_tile_bytes
+            rep.write_bytes += kv_tile_bytes
+            last_resident = jkv
+        key = (gg, qi)
+        rep.total_stream_fetches += 1
+        if last_stream == key:
+            rep.elided_stream_fetches += 1
+        else:
+            rep.stream_bytes += stream_bytes
+            last_stream = key
     return rep
 
 
@@ -217,24 +241,23 @@ def bwd_dkv_llc_model(
     spec: FlashGridSpec,
     order: Order | str,
     *,
+    snake_group: Optional[int] = None,
     n_workers: int = 4,
     capacity_frac: float = 0.5,
+    capacity_bytes: Optional[float] = None,
 ):
     """LRU shared-buffer model of the dK/dV wavefront (paper §3.3/§4.2 shape).
 
     Plays the transposed wavefront trace through an LRU whose capacity is
-    ``capacity_frac`` of the distinct streamed Q-side bytes — the regime
-    where cyclic traversal thrashes (reuse distance = the whole Q stream)
-    and sawtooth halves the non-compulsory misses. Returns a
-    ``cache_sim.SimResult`` in bytes.
+    ``capacity_frac`` of the distinct streamed Q-side bytes (or the absolute
+    ``capacity_bytes`` when given — the fixed-hardware view a joint
+    order/block sweep needs) — the regime where cyclic traversal thrashes
+    (reuse distance = the whole Q stream) and sawtooth halves the
+    non-compulsory misses. Returns a ``cache_sim.SimResult`` in bytes.
     """
     from repro.core.cache_sim import simulate_trace  # lazy: avoid import cycle
 
-    sched = bwd_kv_schedule(
-        order, spec.nq, spec.nkv,
-        causal=spec.causal, window=spec.window,
-        q_block=spec.q_block, kv_block=spec.kv_block,
-    )
+    tr = spec.traversal(order, snake_group)
     q_tile_bytes = spec.q_block * spec.head_dim * spec.elem_bytes
     kv_tile_bytes = spec.kv_block * spec.head_dim * spec.elem_bytes
     weights = {
@@ -243,12 +266,57 @@ def bwd_dkv_llc_model(
         "K": kv_tile_bytes,
         "V": kv_tile_bytes,
     }
-    capacity = capacity_frac * 2 * spec.nq * q_tile_bytes  # frac of Q+dO stream
+    if capacity_bytes is None:
+        # frac of the distinct streamed Q-side bytes (all GQA groups)
+        capacity_bytes = capacity_frac * 2 * spec.n_groups * spec.nq * q_tile_bytes
     # dK/dV are streaming stores (written once, never re-read) — they bypass
     # the buffer, like the paper's L2 *read* sector model.
     trace = (
-        ((tensor, tile), weights[tensor])
-        for tensor, tile in sched.flat_trace(n_workers)
+        ((tensor, key), weights[tensor])
+        for _, tensor, key in tr.wavefront(n_workers, transposed=True)
         if tensor in weights
     )
-    return simulate_trace(trace, capacity)
+    return simulate_trace(trace, capacity_bytes)
+
+
+def fwd_llc_model(
+    spec: FlashGridSpec,
+    order: Order | str,
+    *,
+    snake_group: Optional[int] = None,
+    n_workers: int = 8,
+    capacity_frac: float = 0.75,
+    capacity_bytes: Optional[float] = None,
+):
+    """LRU shared-buffer model of the *forward* wavefront, per order.
+
+    Plays the forward persistent-worker wavefront (round-robin Q tiles,
+    lock-step progress — ``KVSchedule.wavefront_trace``) through an LRU
+    whose capacity is ``capacity_frac`` of the distinct K+V stream bytes.
+    Q tiles are read through the buffer too; O tiles are streaming stores
+    and bypass it. Returns a ``cache_sim.SimResult`` in bytes.
+
+    This is the capacity-bound regime the ``block_snake`` order targets:
+    with causal trimming the workers' pass lengths differ, the wavefront
+    desynchronizes, and sawtooth's full-range opposite-direction sweeps
+    spread concurrent accesses across the whole KV range — misses despite
+    a buffer large enough to hold most of it. Bounding the reversal to
+    ``snake_group`` tiles keeps co-resident accesses within ~one group of
+    each other, so a group sized below the buffer capacity turns those
+    spread accesses back into hits (asserted in tests/test_traversal.py;
+    sweep the knob with ``benchmarks/hillclimb.py --sweep-orders``).
+    """
+    from repro.core.cache_sim import simulate_trace  # lazy: avoid import cycle
+
+    tr = spec.traversal(order, snake_group)
+    q_tile_bytes = spec.q_block * spec.head_dim * spec.elem_bytes
+    kv_tile_bytes = spec.kv_block * spec.head_dim * spec.elem_bytes
+    weights = {"Q": q_tile_bytes, "K": kv_tile_bytes, "V": kv_tile_bytes}
+    if capacity_bytes is None:
+        capacity_bytes = capacity_frac * 2 * spec.nkv * kv_tile_bytes  # K+V bytes
+    trace = (
+        ((tensor, key), weights[tensor])
+        for _, tensor, key in tr.wavefront(n_workers)
+        if tensor in weights
+    )
+    return simulate_trace(trace, capacity_bytes)

@@ -18,6 +18,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.schedule import Order
 from repro.models import build_model
 from repro.serve import Request, ServeEngine, supports_continuous
 from repro.train.checkpoint import latest_step, restore_pytree
@@ -45,7 +46,11 @@ def main():
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--ckpt-dir", default=None, help="restore params from here")
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--attn-order", default="sawtooth", choices=["cyclic", "sawtooth"])
+    ap.add_argument("--attn-order", default="sawtooth",
+                    choices=[o.value for o in Order],
+                    help="KV traversal order (core/schedule.py Traversal IR)")
+    ap.add_argument("--snake-group", type=int, default=None,
+                    help="block_snake reversal window in KV tiles")
     ap.add_argument(
         "--scheduler", default="auto", choices=["auto", "static", "continuous"]
     )
@@ -55,7 +60,7 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    cfg = cfg.with_(attn_order=args.attn_order)
+    cfg = cfg.with_(attn_order=args.attn_order, snake_group=args.snake_group)
     lm = build_model(cfg)
     params = lm.init(jax.random.PRNGKey(0))
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:

@@ -16,6 +16,7 @@ import logging
 import jax
 
 from repro.configs import ParallelConfig, TrainConfig, get_config
+from repro.core.schedule import Order
 from repro.data.pipeline import DataConfig
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import build_model
@@ -48,7 +49,13 @@ def main():
     ap.add_argument("--ckpt-dir", default="checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "adamw_factored"])
-    ap.add_argument("--attn-order", default="sawtooth", choices=["cyclic", "sawtooth"])
+    ap.add_argument("--attn-order", default="sawtooth",
+                    choices=[o.value for o in Order],
+                    help="KV traversal order (core/schedule.py Traversal IR)")
+    ap.add_argument("--snake-group", type=int, default=None,
+                    help="block_snake reversal window in KV tiles "
+                    "(default: schedule default; sweep with "
+                    "benchmarks/hillclimb.py --sweep-orders)")
     ap.add_argument(
         "--attn-impl",
         default=None,
@@ -69,7 +76,7 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    overrides = {"attn_order": args.attn_order}
+    overrides = {"attn_order": args.attn_order, "snake_group": args.snake_group}
     if args.attn_impl:
         overrides.update(attn_impl=args.attn_impl)
     if args.bwd_q_block:

@@ -92,6 +92,7 @@ def attn_apply(
         k,
         v,
         order=cfg.attn_order,
+        snake_group=cfg.snake_group,
         causal=causal and not cross,
         window=cfg.window if (causal and not cross) else None,
         q_block=cfg.q_block,
@@ -145,6 +146,7 @@ def attn_decode(
             _cache_read(cfg, cache, "v"),
             valid,
             order=cfg.attn_order,
+            snake_group=cfg.snake_group,
             impl=cfg.attn_impl,
         )
     else:
@@ -198,6 +200,7 @@ def _attn_decode_paged(cfg: ModelConfig, cache: dict, q, k, v):
         _cache_read(cfg, cache, "v_pages"),
         valid,
         order=cfg.attn_order,
+        snake_group=cfg.snake_group,
         impl=cfg.attn_impl,
         block_table=bt,
     )

@@ -1,0 +1,9 @@
+"""Shared helpers for the order-parametrized kernel/backward sweeps."""
+
+ALL_ORDERS = ["cyclic", "sawtooth", "block_snake"]
+
+
+def order_kwargs(order):
+    """block_snake with a small group so 2-4-tile test grids don't clamp to
+    the sawtooth degenerate."""
+    return {"snake_group": 2} if order == "block_snake" else {}

@@ -24,7 +24,7 @@ CASES = [
 
 
 @pytest.mark.parametrize("case", CASES)
-@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+@pytest.mark.parametrize("order", ["cyclic", "sawtooth", "block_snake"])
 def test_flash_matches_reference(case, order):
     b, sq, skv, hq, hkv, d, causal, window = case
     q, k, v = _mk((b, sq, hq, d), 1), _mk((b, skv, hkv, d), 2), _mk((b, skv, hkv, d), 3)

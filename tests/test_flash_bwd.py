@@ -37,6 +37,8 @@ def _ref_grads(q, k, v, do, *, causal, window):
     return vjp(do)
 
 
+from helpers import ALL_ORDERS as ORDERS, order_kwargs as _okw
+
 # b, sq, skv, hq, hkv, d, causal, window, qb, kb
 BWD_SWEEP = [
     (1, 128, 128, 2, 2, 64, False, None, 128, 128),
@@ -49,7 +51,7 @@ BWD_SWEEP = [
 
 
 @pytest.mark.parametrize("case", BWD_SWEEP)
-@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+@pytest.mark.parametrize("order", ORDERS)
 def test_pallas_bwd_kernels_match_reference_grads(case, order):
     b, sq, skv, hq, hkv, d, causal, window, qb, kb = case
     q, k, v = _mk((b, sq, hq, d), 1), _mk((b, skv, hkv, d), 2), _mk((b, skv, hkv, d), 3)
@@ -57,11 +59,11 @@ def test_pallas_bwd_kernels_match_reference_grads(case, order):
     dq_r, dk_r, dv_r = _ref_grads(q, k, v, do, causal=causal, window=window)
     o, lse = kflash.flash_attention_fwd(
         q, k, v, order=order, causal=causal, window=window,
-        q_block=qb, kv_block=kb, interpret=True, return_lse=True,
+        q_block=qb, kv_block=kb, interpret=True, return_lse=True, **_okw(order),
     )
     dq, dk, dv = kflash.flash_attention_bwd(
         q, k, v, o, lse, do, order=order, causal=causal, window=window,
-        q_block=qb, kv_block=kb, interpret=True,
+        q_block=qb, kv_block=kb, interpret=True, **_okw(order),
     )
     for got, want, name in [(dq, dq_r, "dq"), (dk, dk_r, "dk"), (dv, dv_r, "dv")]:
         np.testing.assert_allclose(
@@ -70,7 +72,7 @@ def test_pallas_bwd_kernels_match_reference_grads(case, order):
 
 
 @pytest.mark.parametrize("case", BWD_SWEEP)
-@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+@pytest.mark.parametrize("order", ORDERS)
 def test_blockwise_fused_bwd_matches_reference_grads(case, order):
     b, sq, skv, hq, hkv, d, causal, window, qb, kb = case
     q, k, v = _mk((b, sq, hq, d), 1), _mk((b, skv, hkv, d), 2), _mk((b, skv, hkv, d), 3)
@@ -78,11 +80,11 @@ def test_blockwise_fused_bwd_matches_reference_grads(case, order):
     dq_r, dk_r, dv_r = _ref_grads(q, k, v, do, causal=causal, window=window)
     o, lse = core_attn.flash_attention(
         q, k, v, order=order, causal=causal, window=window,
-        q_block=qb, kv_block=kb, return_lse=True,
+        q_block=qb, kv_block=kb, return_lse=True, **_okw(order),
     )
     dq, dk, dv = core_attn.flash_attention_bwd(
         q, k, v, o, lse, do, order=order, causal=causal, window=window,
-        q_block=qb, kv_block=kb,
+        q_block=qb, kv_block=kb, **_okw(order),
     )
     for got, want, name in [(dq, dq_r, "dq"), (dk, dk_r, "dk"), (dv, dv_r, "dv")]:
         np.testing.assert_allclose(
@@ -115,7 +117,7 @@ def test_lse_residual_matches_logsumexp():
 
 
 @pytest.mark.parametrize("impl", ["pallas_interpret", "xla", "jnp"])
-@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+@pytest.mark.parametrize("order", ORDERS)
 def test_ops_grad_dispatch_matches_reference(impl, order):
     """jax.grad through ops.attention: every backward dispatch agrees."""
     q, k, v = _mk((1, 256, 4, 32), 1), _mk((1, 256, 2, 32), 2), _mk((1, 256, 2, 32), 3)
@@ -125,6 +127,7 @@ def test_ops_grad_dispatch_matches_reference(impl, order):
             out = ops.attention(
                 q_, k_, v_, order=order, causal=True, window=96, impl=impl_,
                 q_block=64, kv_block=64, bwd_q_block=128, bwd_kv_block=64,
+                **_okw(order),
             )
             return (out.astype(jnp.float32) ** 2).sum()
 

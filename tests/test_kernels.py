@@ -16,6 +16,8 @@ def _mk(shape, seed, dtype=jnp.float32):
     return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
 
 
+from helpers import ALL_ORDERS as ORDERS, order_kwargs as _okw
+
 SWEEP = [
     # b, sq, skv, hq, hkv, d, causal, window, qb, kb
     (1, 128, 128, 2, 2, 64, False, None, 128, 128),
@@ -29,13 +31,13 @@ SWEEP = [
 
 
 @pytest.mark.parametrize("case", SWEEP)
-@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+@pytest.mark.parametrize("order", ORDERS)
 def test_flash_kernel_sweep(case, order):
     b, sq, skv, hq, hkv, d, causal, window, qb, kb = case
     q, k, v = _mk((b, sq, hq, d), 1), _mk((b, skv, hkv, d), 2), _mk((b, skv, hkv, d), 3)
     out = flash_attention_fwd(
         q, k, v, order=order, causal=causal, window=window,
-        q_block=qb, kv_block=kb, interpret=True,
+        q_block=qb, kv_block=kb, interpret=True, **_okw(order),
     )
     ref = flash_attention_ref(q, k, v, causal=causal, window=window)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
@@ -55,12 +57,13 @@ def test_flash_kernel_dtypes(dtype, tol):
     )
 
 
-@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+@pytest.mark.parametrize("order", ORDERS)
 def test_decode_kernel(order):
     q = _mk((3, 1, 8, 64), 1)
     kc, vc = _mk((3, 640, 2, 64), 2), _mk((3, 640, 2, 64), 3)
     lens = jnp.array([640, 500, 129])
-    out = flash_decode_fwd(q, kc, vc, lens, order=order, chunk=128, interpret=True)
+    out = flash_decode_fwd(q, kc, vc, lens, order=order, chunk=128, interpret=True,
+                           **_okw(order))
     ref = decode_attention_ref(q, kc, vc, lens)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
 

@@ -72,7 +72,7 @@ def _paged_problem(seed=0, b=3, hq=8, hkv=2, d=16, page=8, nb=4):
     return q, kp, vp, bt, lens, kc, vc
 
 
-@pytest.mark.parametrize("order", ["cyclic", "sawtooth"])
+@pytest.mark.parametrize("order", ["cyclic", "sawtooth", "block_snake"])
 @pytest.mark.parametrize("window", [None, 7])
 def test_paged_decode_matches_contiguous_oracle(order, window):
     q, kp, vp, bt, lens, kc, vc = _paged_problem()
