@@ -1,17 +1,29 @@
-"""Serve-throughput smoke benchmark: static vs continuous scheduling.
+"""Serve benchmark: static vs continuous scheduling, with latency percentiles.
 
-Serves one mixed-length request stream (many short prompts, a few long
-high-``max_new`` stragglers, staggered arrivals) through both schedulers of
-the ServeEngine on CPU and reports tokens/s. The static path pays for its
-stragglers — every group decodes until its slowest member finishes, short
-requests idling in their slots — while the continuous scheduler refills
-slots from the waiting queue mid-decode, so the same hardware closes the
-stream in far fewer decode steps. Also reports the ``cache_sim``
-page-granular reuse-distance delta for cyclic vs sawtooth page traversal in
-decode (the serving-side analogue of the paper's Fig. 8).
+Two request streams through the ServeEngine on CPU:
+
+* ``mixed`` — many short prompts, a few long high-``max_new`` stragglers,
+  staggered arrivals. The static path pays for its stragglers — every group
+  decodes until its slowest member finishes — while the continuous
+  scheduler's token-budget ragged mixed step chunk-preempts long prefills
+  and refills slots mid-decode, closing the stream in far fewer steps.
+* ``shared_prefix`` — every request carries the same long system prompt
+  plus a short unique tail (the RAG / chat-serving shape). Run through the
+  continuous engine twice: with the pool's content-hash prefix sharing on
+  and off. Sharing admits later requests with their prefix KV already
+  resident (zero prefill compute for those pages, copy-on-write isolation
+  for the tail), which shows up directly in the TTFT percentiles.
+
+Per scheduler/scenario the report carries tokens/s plus TTFT and TPOT
+p50/p95 (per-request wall-clock, captured by the engine), and the
+``cache_sim`` page-locality twins: the cyclic-vs-sawtooth reuse-distance
+delta of decode page traversal, and the shared-vs-private reuse-distance
+delta of the step-level shared-page visit order (cross-row LLC reuse of a
+deduplicated prefix).
 
 Writes ``BENCH_serve.json`` (CI artifact; scheduler regressions show up as
-``speedup`` < 1) and prints a one-line summary per scheduler.
+``speedup`` < 1 or ``shared_prefix.ttft_p95_improvement`` < 1) and prints a
+one-line summary per engine.
 
   PYTHONPATH=src python benchmarks/serve_bench.py            # full smoke
   PYTHONPATH=src python benchmarks/serve_bench.py --quick    # CI-sized
@@ -63,21 +75,70 @@ def build_requests(np, vocab, *, n_short: int, n_long: int, max_new_long: int):
     return reqs
 
 
-def time_engine(eng, make_requests, repeats: int = 3) -> dict:
-    eng.generate(make_requests())  # warm-up: compile every bucket/decode shape
+def build_shared_prefix_requests(
+    np, vocab, *, n_requests: int, prefix_len: int, tail_max: int, max_new: int
+):
+    """One shared system prompt + unique tails, arrivals staggered so the
+    registry is populated before most admissions (the steady-state serving
+    shape for prefix caching)."""
+    from repro.serve import Request
+
+    rng = np.random.default_rng(1)
+    sysp = rng.integers(2, vocab, size=prefix_len).astype(np.int32)
+    reqs = []
+    for i in range(n_requests):
+        if i % 4 == 0 and i > 0:
+            # A bare-system-prompt request ending mid-page: its admission
+            # adopts the partially covered page too, and the first write
+            # into it exercises the pool's copy-on-write fork.
+            tokens = sysp[: prefix_len - 3].copy()
+        else:
+            tail = rng.integers(2, vocab, size=int(rng.integers(2, tail_max + 1)))
+            tokens = np.concatenate([sysp, tail.astype(np.int32)])
+        reqs.append(
+            Request(
+                tokens=tokens,
+                max_new_tokens=max_new,
+                rid=i,
+                arrival=i,
+            )
+        )
+    return reqs
+
+
+def _pct(xs, p):
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    i = min(len(xs) - 1, max(0, round(p / 100 * (len(xs) - 1))))
+    return xs[i]
+
+
+def time_engine(eng, make_requests, repeats: int = 5) -> dict:
+    eng.generate(make_requests())  # warm-up: compile both step widths
     best, results = None, None
+    ttfts, tpots = [], []
     for _ in range(repeats):  # best-of-N: the streams are short, CI CPUs noisy
         reqs = make_requests()
         t0 = time.time()
-        results = eng.generate(reqs)
+        res = eng.generate(reqs)
         dt = time.time() - t0
-        best = dt if best is None else min(best, dt)
+        if best is None or dt < best:
+            best, results = dt, res
+        # Latency percentiles pool every repeat's requests — a p95 from one
+        # short run is a max(), far too noisy for a CI trend line.
+        ttfts += [r.ttft_s for r in res]
+        tpots += [r.tpot_s for r in res if r.steps > 1]
     tokens = sum(r.steps for r in results)
     return {
         "requests": len(results),
         "tokens": tokens,
         "seconds": round(best, 4),
         "tok_per_s": round(tokens / best, 2) if best > 0 else float("inf"),
+        "ttft_p50_s": round(_pct(ttfts, 50), 4),
+        "ttft_p95_s": round(_pct(ttfts, 95), 4),
+        "tpot_p50_s": round(_pct(tpots, 50), 4),
+        "tpot_p95_s": round(_pct(tpots, 95), 4),
     }
 
 
@@ -87,7 +148,10 @@ def main() -> None:
     import numpy as np
 
     from repro.configs import get_config
-    from repro.core.cache_sim import simulate_paged_decode
+    from repro.core.cache_sim import (
+        simulate_paged_decode,
+        simulate_shared_prefix_decode,
+    )
     from repro.models import build_model
     from repro.serve import ServeEngine
 
@@ -97,6 +161,7 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -109,36 +174,83 @@ def main() -> None:
         np, cfg.vocab, n_short=n_short, n_long=n_long, max_new_long=max_new_long
     )
 
-    eng_static = ServeEngine(
-        lm, params, batch_size=args.batch_size, max_len=args.max_len
-    )
-    eng_cont = ServeEngine(
-        lm,
-        params,
-        batch_size=args.batch_size,
-        max_len=args.max_len,
-        scheduler="continuous",
-        page_size=args.page_size,
-    )
+    def engine(scheduler, **kw):
+        return ServeEngine(
+            lm,
+            params,
+            batch_size=args.batch_size,
+            max_len=args.max_len,
+            scheduler=scheduler,
+            page_size=args.page_size,
+            **kw,
+        )
 
     report = {
         "arch": args.arch,
         "batch_size": args.batch_size,
         "max_len": args.max_len,
         "page_size": args.page_size,
-        "static": time_engine(eng_static, make),
-        "continuous": time_engine(eng_cont, make),
+        "prefill_chunk": args.prefill_chunk,
+        "static": time_engine(engine("static"), make),
+        "continuous": time_engine(
+            engine("continuous", prefill_chunk=args.prefill_chunk), make
+        ),
     }
     report["speedup"] = round(
         report["continuous"]["tok_per_s"] / report["static"]["tok_per_s"], 3
     )
 
-    # Page-locality twin of the serving decode loop (cache_sim §page trace):
-    # a batch at the benchmark's lengths, decode max_new_long steps.
+    # Shared-system-prompt scenario: continuous engine with prefix sharing
+    # on vs off (the A/B is apples-to-apples — same mixed step, same
+    # budget; only the pool's page dedup differs).
+    n_req, prefix_len, max_new = (8, 48, 8) if args.quick else (12, 64, 12)
+    make_shared = lambda: build_shared_prefix_requests(
+        np, cfg.vocab, n_requests=n_req, prefix_len=prefix_len, tail_max=8,
+        max_new=max_new,
+    )
+    eng_shared = engine("continuous", prefill_chunk=args.prefill_chunk)
+    shared = time_engine(eng_shared, make_shared)
+    shared.update(eng_shared.last_stats)
+    eng_unshared = engine(
+        "continuous", prefill_chunk=args.prefill_chunk, prefix_sharing=False
+    )
+    unshared = time_engine(eng_unshared, make_shared)
+    unshared.update(eng_unshared.last_stats)
+    report["shared_prefix"] = {
+        "n_requests": n_req,
+        "prefix_len": prefix_len,
+        "sharing_on": shared,
+        "sharing_off": unshared,
+        "ttft_p95_improvement": round(
+            unshared["ttft_p95_s"] / max(shared["ttft_p95_s"], 1e-9), 3
+        ),
+        "tok_per_s_improvement": round(
+            shared["tok_per_s"] / max(unshared["tok_per_s"], 1e-9), 3
+        ),
+        # Deterministic (wall-clock-free) trend metrics: sharing must strictly
+        # reduce the wide (chunk-prefill) step count on this stream.
+        "wide_steps_saved": unshared["wide_steps"] - shared["wide_steps"],
+    }
+
+    # Page-locality twins of the serving decode loop (cache_sim):
+    # per-row traversal order, and cross-row reuse of a deduplicated prefix.
     lens = [24] * n_long + [96] * 1
     report["page_trace"] = {
         order: simulate_paged_decode(order, lens, max_new_long, args.page_size)
         for order in ("cyclic", "sawtooth")
+    }
+    report["shared_page_trace"] = {
+        f"{order}_{'shared' if sh else 'private'}": simulate_shared_prefix_decode(
+            order,
+            args.batch_size,
+            prefix_len // args.page_size,
+            [8] * args.batch_size,
+            max_new,
+            args.page_size,
+            shared=sh,
+        )
+        for order in ("cyclic", "sawtooth")
+        for sh in (True, False)
     }
 
     with open(args.out, "w") as f:
@@ -147,13 +259,28 @@ def main() -> None:
         r = report[name]
         print(
             f"{name:11s} {r['tokens']:4d} tokens in {r['seconds']:.2f}s "
-            f"-> {r['tok_per_s']:.1f} tok/s"
+            f"-> {r['tok_per_s']:.1f} tok/s  "
+            f"ttft p50/p95 {r['ttft_p50_s']*1e3:.0f}/{r['ttft_p95_s']*1e3:.0f} ms"
         )
+    sp = report["shared_prefix"]
+    print(
+        f"shared-prefix: {sp['sharing_on']['pages_adopted']} pages "
+        f"({sp['sharing_on']['prompt_tokens_adopted']} tokens) adopted, "
+        f"{sp['sharing_on']['cow_forks']} CoW forks, "
+        f"{sp['wide_steps_saved']} wide steps saved; ttft p95 "
+        f"{sp['sharing_off']['ttft_p95_s']*1e3:.0f} -> "
+        f"{sp['sharing_on']['ttft_p95_s']*1e3:.0f} ms "
+        f"({sp['ttft_p95_improvement']}x)"
+    )
     pt = report["page_trace"]
+    st = report["shared_page_trace"]
     print(
         f"speedup {report['speedup']}x; page reuse distance "
         f"cyclic {pt['cyclic']['mean_reuse_distance']:.1f} -> "
-        f"sawtooth {pt['sawtooth']['mean_reuse_distance']:.1f}"
+        f"sawtooth {pt['sawtooth']['mean_reuse_distance']:.1f}; "
+        f"shared-prefix reuse distance private "
+        f"{st['sawtooth_private']['mean_reuse_distance']:.1f} -> shared "
+        f"{st['sawtooth_shared']['mean_reuse_distance']:.1f}"
     )
 
 

@@ -413,6 +413,7 @@ def decode_attention(
     window: Optional[int] = None,
     scale: Optional[float] = None,
     block_table: Optional[jax.Array] = None,
+    q_lens: Optional[jax.Array] = None,
     order: Order | str = Order.CYCLIC,
     snake_group: Optional[int] = None,
 ) -> jax.Array:
@@ -427,7 +428,9 @@ def decode_attention(
     (n_pages, page, Hkv, D); ``block_table`` (B, n_blocks) maps each row's
     logical page j to a physical pool page, and pages are visited in
     ``KVSchedule`` order (``order='sawtooth'`` alternates direction per
-    decode step, parity keyed on ``cache_len``) — see
+    decode step, parity keyed on ``cache_len``). The paged path is ragged:
+    q may carry C > 1 chunk positions per row with per-row ``q_lens``
+    (chunked prefill / mixed serve steps) — see
     :func:`paged_decode_attention`.
     """
     if block_table is not None:
@@ -437,11 +440,13 @@ def decode_attention(
             v_cache,
             cache_len,
             block_table,
+            q_lens=q_lens,
             window=window,
             scale=scale,
             order=order,
             snake_group=snake_group,
         )
+    assert q_lens is None, "q_lens requires the paged layout (block_table)"
     b, one, hq, d = q.shape
     assert one == 1
     _, s_max, hkv, _ = k_cache.shape
@@ -467,35 +472,53 @@ def paged_decode_attention(
     cache_len: jax.Array | int,
     block_table: jax.Array,
     *,
+    q_lens: Optional[jax.Array] = None,
     window: Optional[int] = None,
     scale: Optional[float] = None,
     order: Order | str = Order.CYCLIC,
     snake_group: Optional[int] = None,
 ) -> jax.Array:
-    """Blockwise decode attention over a paged KV pool, schedule-ordered.
+    """Blockwise ragged attention over a paged KV pool, schedule-ordered.
 
-    q: (B, 1, Hq, D). k_pool/v_pool: (n_pages, page, Hkv, D) — one shared
-    pool across the batch. block_table: (B, n_blocks) int32, logical page j
-    of row b lives in pool page ``block_table[b, j]``. cache_len: (B,) or
-    scalar valid lengths (logical positions [0, len) are live).
+    q: (B, C, Hq, D) — a ragged chunk of C query positions per row (C=1 is
+    plain decode; C>1 is a chunked-prefill / mixed serve step).
+    k_pool/v_pool: (n_pages, page, Hkv, D) — one shared pool across the
+    batch. block_table: (B, n_blocks) int32, logical page j of row b lives
+    in pool page ``block_table[b, j]``. cache_len: (B,) or scalar valid KV
+    lengths *including* this chunk's writes. q_lens: (B,) number of valid
+    query rows in each row's chunk (default: all C); query t of row b sits
+    at absolute position ``cache_len - q_len + t`` and attends causally to
+    positions ``<=`` its own — causal masking *inside* the chunk, so one
+    ragged step serves decode rows (q_len 1) and prefill chunks (q_len up
+    to C) together.
 
     Pages are streamed through online softmax in the order given by a
     :class:`KVSchedule` over the gathered pages; sawtooth parity is driven
-    by ``cache_len`` so consecutive decode steps of one sequence reverse
-    direction (the tail pages of step t are the head pages of step t+1 —
-    the decode analogue of the paper's prefill reordering). The result is
-    traversal-order invariant, matching the contiguous oracle.
+    per row by ``cache_len`` (the visited length) so consecutive steps of
+    one sequence reverse direction (the tail pages of step t are the head
+    pages of step t+1 — the decode analogue of the paper's prefill
+    reordering). The result is traversal-order invariant, matching the
+    contiguous oracle.
 
-    Fully-masked rows (len 0 — e.g. a free slot in a continuous-batching
-    pool) return exact zeros rather than NaN.
+    Fully-masked rows (q_len 0 / len 0 — e.g. a free slot in a
+    continuous-batching pool) return exact zeros rather than NaN.
     """
-    b, one, hq, d = q.shape
-    assert one == 1, "decode attention takes a single query position"
+    b, c, hq, d = q.shape
     n_pages, page, hkv, _ = k_pool.shape
     n_blocks = block_table.shape[1]
     g = hq // hkv
     scale_ = d ** -0.5 if scale is None else scale
     lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    qls = (
+        jnp.full((b,), c, jnp.int32)
+        if q_lens is None
+        else jnp.broadcast_to(jnp.asarray(q_lens, jnp.int32), (b,))
+    )
+    # Absolute position of each query row; invalid rows (t >= q_len) get a
+    # fully-masked position so they contribute exact zeros.
+    tq = jnp.arange(c, dtype=jnp.int32)[None, :]
+    q_pos = (lens - qls)[:, None] + tq          # (B, C)
+    q_valid = tq < qls[:, None]
 
     sched = KVSchedule(
         order, n_q=1, n_kv=n_blocks, causal=False, q_block=1, kv_block=page,
@@ -504,7 +527,8 @@ def paged_decode_attention(
     visit = sched.page_order(lens)  # (B, n_blocks) logical page ids
     phys = jnp.take_along_axis(block_table.astype(jnp.int32), visit, axis=1)
 
-    qf = q.astype(jnp.float32).reshape(b, hkv, g, d) * scale_
+    qf = q.astype(jnp.float32).reshape(b, c, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    qf = qf * scale_                            # (B, Hkv, G, C, D)
     offs = jnp.arange(page, dtype=jnp.int32)[None, :]
 
     def body(carry, j):
@@ -513,25 +537,30 @@ def paged_decode_attention(
         pid = jax.lax.dynamic_index_in_dim(phys, j, axis=1, keepdims=False)
         k_j = k_pool[pid].astype(jnp.float32)  # (B, page, Hkv, D)
         v_j = v_pool[pid].astype(jnp.float32)
-        pos = logical[:, None] * page + offs  # (B, page) absolute positions
-        valid = pos < lens[:, None]
+        pos = logical[:, None] * page + offs   # (B, page) absolute positions
+        # (B, C, page): kv visible to query row t iff within [0, len),
+        # causally at-or-before the query's own position, and the query
+        # row itself is valid; a window trims the low end per query row.
+        valid = (pos[:, None, :] <= q_pos[:, :, None]) & q_valid[:, :, None]
+        valid &= pos[:, None, :] < lens[:, None, None]
         if window is not None:
-            valid &= pos > (lens[:, None] - 1 - window)
-        s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_j)
-        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+            valid &= pos[:, None, :] > (q_pos[:, :, None] - window)
+        ok = valid[:, None, None, :, :]        # (B, 1, 1, C, page)
+        s = jnp.einsum("bhgcd,bkhd->bhgck", qf, k_j)
+        s = jnp.where(ok, s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
-        p = jnp.where(valid[:, None, None, :], jnp.exp(s - m_new[..., None]), 0.0)
+        p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
         alpha = jnp.exp(m - m_new)
         l_new = l * alpha + p.sum(axis=-1)
-        acc_new = acc * alpha[..., None] + jnp.einsum("bhgk,bkhd->bhgd", p, v_j)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhgck,bkhd->bhgcd", p, v_j)
         return (m_new, l_new, acc_new), None
 
     init = (
-        jnp.full((b, hkv, g), NEG_INF, jnp.float32),
-        jnp.zeros((b, hkv, g), jnp.float32),
-        jnp.zeros((b, hkv, g, d), jnp.float32),
+        jnp.full((b, hkv, g, c), NEG_INF, jnp.float32),
+        jnp.zeros((b, hkv, g, c), jnp.float32),
+        jnp.zeros((b, hkv, g, c, d), jnp.float32),
     )
     (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_blocks))
     l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (free slots)
-    o = acc / l[..., None]
-    return o.reshape(b, 1, hq, d).astype(q.dtype)
+    o = acc / l[..., None]           # (B, Hkv, G, C, D)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, c, hq, d).astype(q.dtype)

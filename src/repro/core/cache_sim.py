@@ -25,7 +25,12 @@ from typing import Iterable, Iterator, Sequence
 
 from repro.core import cache_model
 from repro.core.cache_model import AttentionWorkload, HWConfig
-from repro.core.schedule import Order, kv_index_host, num_kv_tiles_for
+from repro.core.schedule import (
+    Order,
+    kv_index_host,
+    num_kv_tiles_for,
+    step_page_visits,
+)
 
 __all__ = [
     "SimResult",
@@ -36,6 +41,8 @@ __all__ = [
     "reuse_distances",
     "decode_page_trace",
     "simulate_paged_decode",
+    "shared_prefix_decode_trace",
+    "simulate_shared_prefix_decode",
 ]
 
 
@@ -237,6 +244,97 @@ def simulate_paged_decode(
     here is the serving-side analogue of the paper's prefill Fig. 8.
     """
     trace = list(decode_page_trace(order, lens, n_steps, page, snake_group=snake_group))
+    dists = reuse_distances(trace)
+    stats = {
+        "accesses": len(trace),
+        "mean_reuse_distance": (sum(dists) / len(dists)) if dists else 0.0,
+        "max_reuse_distance": max(dists, default=0),
+    }
+    if capacity_pages is not None:
+        res = simulate_trace(((k, 1.0) for k in trace), capacity_pages)
+        stats["hit_rate"] = res.hit_rate
+        stats["misses"] = res.misses
+        stats["cold_misses"] = res.cold_misses
+    return stats
+
+
+def shared_prefix_decode_trace(
+    order: Order | str,
+    n_rows: int,
+    prefix_pages: int,
+    own_lens: Sequence[int],
+    n_steps: int,
+    page: int,
+    *,
+    shared: bool = True,
+    snake_group: int | None = None,
+) -> Iterator[tuple]:
+    """Physical-page access trace of a mixed decode step stream whose rows
+    share a prompt prefix.
+
+    ``n_rows`` sequences each hold ``prefix_pages`` prompt pages plus their
+    own suffix of ``own_lens[b]`` tokens (growing one per step). With
+    ``shared=True`` the prefix pages are the *same physical pages* for
+    every row (the ``serve.kv_pool`` hash-dedup layout); with False every
+    row owns a private copy (the pre-sharing layout). Page walks follow the
+    per-row ``Traversal`` (sawtooth parity keyed per row on the visited
+    length) and rows interleave in lock-step via
+    ``schedule.step_page_visits`` — the step-level shared-page visit order.
+
+    Keys: ("K"|"V", physical_page). The reuse-distance delta between
+    shared and unshared is the serving-side locality win of prefix dedup:
+    a shared page is re-touched within ~2·n_rows accesses instead of once
+    per row's full private walk.
+    """
+    order = Order.parse(order)
+    if len(own_lens) != n_rows:
+        raise ValueError(f"{n_rows} rows vs {len(own_lens)} own_lens")
+    cur = [int(l) for l in own_lens]
+    # Physical page ids: shared prefix pages 0..prefix_pages-1 (or a private
+    # copy per row), then per-row suffix pages.
+    def phys(row: int, logical: int) -> int:
+        if logical < prefix_pages:
+            return logical if shared else row * 10_000 + logical
+        return 1_000_000 + row * 10_000 + logical
+    for _ in range(n_steps):
+        row_pages = []
+        parities = []
+        for b in range(n_rows):
+            length = prefix_pages * page + cur[b] + 1  # incl. token written now
+            n = max(1, -(-length // page))
+            row_pages.append([phys(b, j) for j in range(n)])
+            parities.append(length)
+        for b, pid in step_page_visits(
+            order, row_pages, parities, snake_group=snake_group
+        ):
+            yield ("K", pid)
+            yield ("V", pid)
+        cur = [l + 1 for l in cur]
+
+
+def simulate_shared_prefix_decode(
+    order: Order | str,
+    n_rows: int,
+    prefix_pages: int,
+    own_lens: Sequence[int],
+    n_steps: int,
+    page: int,
+    *,
+    shared: bool = True,
+    capacity_pages: float | None = None,
+    snake_group: int | None = None,
+) -> dict:
+    """Replay a shared-prefix mixed decode stream; report locality + LRU
+    stats (same schema as :func:`simulate_paged_decode`). Comparing
+    ``shared=True`` vs ``False`` quantifies the cross-row LLC reuse that
+    copy-on-write page dedup creates; comparing orders shows the paper's
+    sawtooth/block_snake deltas surviving into the shared layout."""
+    trace = list(
+        shared_prefix_decode_trace(
+            order, n_rows, prefix_pages, own_lens, n_steps, page,
+            shared=shared, snake_group=snake_group,
+        )
+    )
     dists = reuse_distances(trace)
     stats = {
         "accesses": len(trace),

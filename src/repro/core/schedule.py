@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterator, Optional
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +61,7 @@ __all__ = [
     "kv_index",
     "kv_index_host",
     "page_visit_order",
+    "step_page_visits",
     "tile_ids",
     "num_kv_tiles_for",
     "q_tile_bounds_for",
@@ -188,6 +189,48 @@ def page_visit_order(
     size = jnp.minimum(group, n_kv - base)
     rev = base + (size - 1) - (j - base)
     return jnp.where(p % 2 == 0, j, rev)
+
+
+def step_page_visits(
+    order: Order | str,
+    row_pages: "Sequence[Sequence[int]]",
+    parities: "Sequence[int]",
+    *,
+    snake_group: Optional[int] = None,
+) -> Iterator[tuple[int, int]]:
+    """Step-level shared-page visit order of one ragged mixed serve step.
+
+    ``row_pages[b]`` is row ``b``'s *physical* page walk domain (its block
+    table prefix covering its valid KV) and ``parities[b]`` its per-row
+    sawtooth parity driver (the visited length, as in
+    :meth:`Traversal.visit_order`). The rows progress in lock-step — the
+    paper's wavefront execution model applied to the serve step's
+    (batch·kv-head, page) grid — so at inner step ``j`` every still-active
+    row visits the ``j``-th page of its own traversal. Yields ``(row,
+    physical_page)`` in that global interleaved order.
+
+    This is the replay twin the cache simulator uses to model **cross-row
+    LLC reuse of shared prefix pages**: rows that adopted the same physical
+    prompt pages (``serve.kv_pool`` hash sharing) touch the *same* entries
+    within a few interleaved steps of each other, so the shared prefix is
+    fetched once per step rather than once per row — a locality axis that
+    simply does not exist without page dedup.
+    """
+    order = Order.parse(order)
+    rows = [list(p) for p in row_pages]
+    if len(rows) != len(parities):
+        raise ValueError(f"{len(rows)} rows vs {len(parities)} parities")
+    orders = [
+        [
+            pages[kv_index_host(order, par, j, len(pages), snake_group=snake_group)]
+            for j in range(len(pages))
+        ]
+        for pages, par in zip(rows, parities)
+    ]
+    for j in range(max((len(o) for o in orders), default=0)):
+        for b, visit in enumerate(orders):
+            if j < len(visit):
+                yield b, visit[j]
 
 
 def num_kv_tiles_for(

@@ -16,6 +16,10 @@ block tables, scalar-prefetched visit order) restores a real reuse axis:
 consecutive decode steps of one sequence re-walk the same pages, and
 sawtooth parity keyed on the cache length re-touches the tail pages first
 (DESIGN.md §8; reuse-distance deltas in core/cache_sim's page-trace mode).
+It is also *ragged*: q may carry C > 1 chunk positions per row with
+per-row valid counts, causally masked inside the chunk — the serve
+engine's unified mixed step (decode rows + chunked prefill rows) is one
+launch of this kernel per layer.
 """
 
 from __future__ import annotations
@@ -44,7 +48,9 @@ __all__ = ["flash_decode_fwd", "paged_flash_decode_fwd"]
 
 
 def _decode_step(q, k, v, ok, o_ref, m_scr, l_scr, acc_scr, *, c, n_chunks, scale):
-    """One online-softmax chunk: q (Gp, D), k/v (ck, D), ok (ck,) bool."""
+    """One online-softmax chunk: q (Gp, D), k/v (ck, D), ok (1|Gp, ck) bool
+    (broadcast against the (Gp, ck) score tile — per-query-row masks carry
+    the ragged chunk's in-chunk causal structure)."""
 
     @pl.when(c == 0)
     def _init():
@@ -58,12 +64,12 @@ def _decode_step(q, k, v, ok, o_ref, m_scr, l_scr, acc_scr, *, c, n_chunks, scal
         )
         * scale
     )  # (Gp, ck)
-    s = jnp.where(ok[None, :], s, MASK_VALUE)
+    s = jnp.where(ok, s, MASK_VALUE)
 
     m_prev = m_scr[:, :1]
     l_prev = l_scr[:, :1]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.where(ok[None, :], jnp.exp(s - m_new), 0.0)
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
     alpha = jnp.exp(m_prev - m_new)
     l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
     acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
@@ -97,7 +103,7 @@ def _decode_kernel(
         q_ref[0],
         k_ref[0],
         v_ref[0],
-        mask_ref[0] > 0.0,
+        (mask_ref[0] > 0.0)[None, :],
         o_ref,
         m_scr,
         l_scr,
@@ -109,30 +115,52 @@ def _decode_kernel(
 
 
 def _paged_decode_kernel(
-    visit_ref,  # scalar prefetch: (B, n_blocks) physical page ids (unused here —
-    # consumed by the index maps; pallas passes it through to the body too)
-    q_ref,  # (1, Gp, D)
+    phys_ref,     # scalar prefetch: (B, n_blocks) physical page ids (index maps)
+    logical_ref,  # scalar prefetch: (B, n_blocks) visit-ordered logical page ids
+    meta_ref,     # scalar prefetch: (B, 2) per-row [cache_len, q_len]
+    q_ref,  # (1, CGp, D) — C chunk rows × G GQA rows, query-major
     k_ref,  # (1, page, 1, D) one pool page, one kv head
     v_ref,
-    mask_ref,  # (1, page) f32 0/1, already in visit order
-    o_ref,  # (1, Gp, D)
+    o_ref,  # (1, CGp, D)
     m_scr,
     l_scr,
     acc_scr,
     *,
     n_chunks: int,
     scale: float,
+    page: int,
+    g: int,
+    hkv: int,
+    window: Optional[int],
 ):
+    """Ragged paged chunk: the whole mask is derived in-kernel from the
+    scalar-prefetched (cache_len, q_len) row metadata and the visit-ordered
+    logical page id — no O(B·n_blocks·C·page) mask operand ever exists.
+    Query row r of the folded tile is chunk position ``r // g`` at absolute
+    position ``cache_len - q_len + r // g``; rows past ``q_len`` (padding /
+    inactive slots) are fully masked and finalize to exact zeros."""
+    c = pl.program_id(1)
+    b = pl.program_id(0) // hkv
+    logical = logical_ref[b, c]
+    length = meta_ref[b, 0]
+    q_len = meta_ref[b, 1]
+    rows = q_ref.shape[1]
+    row_t = jax.lax.broadcasted_iota(jnp.int32, (rows, page), 0) // g
+    col = logical * page + jax.lax.broadcasted_iota(jnp.int32, (rows, page), 1)
+    q_pos = (length - q_len) + row_t
+    ok = (col <= q_pos) & (col < length) & (row_t < q_len)
+    if window is not None:
+        ok &= col > q_pos - window
     _decode_step(
         q_ref[0],
         k_ref[0, :, 0, :],
         v_ref[0, :, 0, :],
-        mask_ref[0] > 0.0,
+        ok,
         o_ref,
         m_scr,
         l_scr,
         acc_scr,
-        c=pl.program_id(1),
+        c=c,
         n_chunks=n_chunks,
         scale=scale,
     )
@@ -151,12 +179,15 @@ def flash_decode_fwd(
     snake_group: Optional[int] = None,
     interpret: bool = False,
     block_table: Optional[jax.Array] = None,
+    q_lens: Optional[jax.Array] = None,
 ) -> jax.Array:
     """q (B,1,Hq,D); caches (B,S_max,Hkv,D); cache_len scalar or (B,).
 
     With ``block_table`` (B, n_blocks), caches are shared page pools
     (n_pages, page, Hkv, D) and the kernel visits each row's pages through
-    the block table in schedule order (see :func:`paged_flash_decode_fwd`).
+    the block table in schedule order; q may then carry C > 1 ragged chunk
+    positions per row with per-row ``q_lens`` (see
+    :func:`paged_flash_decode_fwd`).
     """
     if block_table is not None:
         return paged_flash_decode_fwd(
@@ -165,12 +196,14 @@ def flash_decode_fwd(
             v_cache,
             cache_len,
             block_table,
+            q_lens=q_lens,
             order=order,
             window=window,
             scale=scale,
             snake_group=snake_group,
             interpret=interpret,
         )
+    assert q_lens is None, "q_lens requires the paged layout (block_table)"
     return _flash_decode_contiguous(
         q,
         k_cache,
@@ -288,26 +321,31 @@ def paged_flash_decode_fwd(
     cache_len: jax.Array | int,
     block_table: jax.Array,
     *,
+    q_lens: Optional[jax.Array] = None,
     order: Order | str = Order.CYCLIC,
     window: Optional[int] = None,
     scale: Optional[float] = None,
     snake_group: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Paged decode: q (B,1,Hq,D); pools (n_pages, page, Hkv, D).
+    """Ragged paged attention: q (B,C,Hq,D); pools (n_pages, page, Hkv, D).
+
+    C = 1 is plain decode; C > 1 is a chunked-prefill / mixed serve step,
+    with per-row ``q_lens`` valid chunk rows and causal masking *inside*
+    the chunk (query t of row b sits at position ``cache_len - q_len + t``).
 
     The schedule is folded into the operands before the kernel launches:
     the compiled ``Traversal``'s ``visit_order`` lowering (sawtooth parity
-    = cache_len, so consecutive decode steps reverse direction) gives each
+    = cache_len per row, so consecutive steps reverse direction) gives each
     row's logical visit order, the block table maps it to physical pool
     pages, and that (B, n_blocks) physical id array is the scalar-prefetch
     operand the KV ``index_map`` reads — the classic TPU paged-attention
-    pattern. The validity mask is pre-gathered into the same visit order so
-    mask chunk c always matches KV chunk c.
+    pattern. Validity/causality is computed *in-kernel* from two more
+    scalar-prefetch operands (the visit-ordered logical ids and per-row
+    (cache_len, q_len)), so no O(B·n_blocks·C·page) mask operand exists.
     """
     order = Order.parse(order)
-    b, one, hq, d = q.shape
-    assert one == 1, "decode kernel takes a single query position"
+    b, c, hq, d = q.shape
     n_pages, page, hkv, _ = k_pool.shape
     n_blocks = block_table.shape[1]
     g = hq // hkv
@@ -318,34 +356,42 @@ def paged_flash_decode_fwd(
         snake_group=snake_group,
     )
     lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    qls = (
+        jnp.full((b,), c, jnp.int32)
+        if q_lens is None
+        else jnp.broadcast_to(jnp.asarray(q_lens, jnp.int32), (b,))
+    )
     visit = tr.visit_order(lens)  # (B, n_blocks) logical
     phys = jnp.take_along_axis(block_table.astype(jnp.int32), visit, axis=1)
+    meta = jnp.stack([lens, qls], axis=1)  # (B, 2)
 
-    # Validity mask per logical position, gathered into visit order.
-    pos = visit[:, :, None] * page + jnp.arange(page, dtype=jnp.int32)
-    ok = pos < lens[:, None, None]
-    if window is not None:
-        ok &= pos > (lens[:, None, None] - 1 - window)
-    mask = ok.reshape(b, n_blocks * page).astype(jnp.float32)
-
-    g_pad = max(8, g)
-    qf = q.reshape(b, hkv, g, d).reshape(b * hkv, g, d)
-    qf = _pad_axis(_pad_axis(qf, 1, g_pad), 2, LANES)
+    # Fold (chunk, GQA group) into one query-major row axis: row = t*g + gg.
+    cg = c * g
+    cg_pad = max(8, -(-cg // 8) * 8)
+    qf = (
+        q.reshape(b, c, hkv, g, d)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(b * hkv, cg, d)
+    )
+    qf = _pad_axis(_pad_axis(qf, 1, cg_pad), 2, LANES)
     kf = _pad_axis(k_pool, 3, LANES)
     vf = _pad_axis(v_pool, 3, LANES)
     dp = kf.shape[3]
 
-    def q_map(bh, c, visit_ref):
+    def q_map(bh, j, phys_ref, logical_ref, meta_ref):
         return (bh, 0, 0)
 
-    def kv_map(bh, c, visit_ref):
-        return (visit_ref[bh // hkv, c], 0, bh % hkv, 0)
-
-    def mask_map(bh, c, visit_ref):
-        return (bh // hkv, c)
+    def kv_map(bh, j, phys_ref, logical_ref, meta_ref):
+        return (phys_ref[bh // hkv, j], 0, bh % hkv, 0)
 
     kernel = functools.partial(
-        _paged_decode_kernel, n_chunks=n_blocks, scale=scale_
+        _paged_decode_kernel,
+        n_chunks=n_blocks,
+        scale=scale_,
+        page=page,
+        g=g,
+        hkv=hkv,
+        window=window,
     )
     compiler_params = None
     if _CompilerParams is not None and not interpret:
@@ -354,28 +400,27 @@ def paged_flash_decode_fwd(
         )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=3,
         grid=(b * hkv, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, g_pad, dp), q_map),
+            pl.BlockSpec((1, cg_pad, dp), q_map),
             pl.BlockSpec((1, page, 1, dp), kv_map),
             pl.BlockSpec((1, page, 1, dp), kv_map),
-            pl.BlockSpec((1, page), mask_map),
         ],
-        out_specs=pl.BlockSpec((1, g_pad, dp), q_map),
+        out_specs=pl.BlockSpec((1, cg_pad, dp), q_map),
         scratch_shapes=[
-            pltpu.VMEM((g_pad, LANES), jnp.float32),
-            pltpu.VMEM((g_pad, LANES), jnp.float32),
-            pltpu.VMEM((g_pad, dp), jnp.float32),
+            pltpu.VMEM((cg_pad, LANES), jnp.float32),
+            pltpu.VMEM((cg_pad, LANES), jnp.float32),
+            pltpu.VMEM((cg_pad, dp), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, dp), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, cg_pad, dp), q.dtype),
         interpret=interpret,
         **({"compiler_params": compiler_params} if compiler_params else {}),
-    )(phys, qf, kf, vf, mask)
+    )(phys, visit, meta, qf, kf, vf)
 
-    out = out.reshape(b, hkv, g_pad, dp)[:, :, :g, :d]
-    return out.reshape(b, 1, hq, d)
+    out = out[:, :cg, :d].reshape(b, hkv, c, g, d)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, c, hq, d)

@@ -230,13 +230,18 @@ def attention_decode(
     chunk: int = 512,
     impl: Impl = "auto",
     block_table: Optional[jax.Array] = None,
+    q_lens: Optional[jax.Array] = None,
     snake_group: Optional[int] = None,
 ) -> jax.Array:
-    """Single-token decode attention vs a KV cache. Not differentiated.
+    """Decode / ragged-chunk attention vs a KV cache. Not differentiated.
 
     ``block_table`` switches both backends to the paged layout: caches are
     shared (n_pages, page, Hkv, D) pools and pages are visited in schedule
-    order through the table (sawtooth parity keyed on ``cache_len``).
+    order through the table (sawtooth parity keyed per row on
+    ``cache_len``). The paged layout is ragged: q may carry C > 1 chunk
+    positions per row with per-row ``q_lens`` valid rows and causal masking
+    inside the chunk — the serve engine's unified mixed step (decode rows
+    at q_len 1 + chunked prefill rows) runs through exactly this call.
     """
     order = Order.parse(order)
     impl = _resolve(impl)
@@ -253,6 +258,7 @@ def attention_decode(
             snake_group=snake_group,
             interpret=(impl == "pallas_interpret"),
             block_table=block_table,
+            q_lens=q_lens,
         )
     if impl in ("xla", "reference"):
         return core_attn.decode_attention(
@@ -263,6 +269,7 @@ def attention_decode(
             window=window,
             scale=scale,
             block_table=block_table,
+            q_lens=q_lens,
             order=order,
             snake_group=snake_group,
         )

@@ -55,6 +55,7 @@ __all__ = [
     "bwd_dkv_traffic",
     "bwd_dkv_llc_model",
     "fwd_llc_model",
+    "shared_prefix_llc_model",
 ]
 
 
@@ -318,5 +319,59 @@ def fwd_llc_model(
         ((tensor, key), weights[tensor])
         for _, tensor, key in tr.wavefront(n_workers)
         if tensor in weights
+    )
+    return simulate_trace(trace, capacity_bytes)
+
+
+def shared_prefix_llc_model(
+    order: Order | str,
+    *,
+    n_rows: int = 8,
+    prefix_pages: int = 8,
+    own_tokens: int = 16,
+    n_steps: int = 16,
+    page: int = 16,
+    n_kv_heads: int = 2,
+    head_dim: int = 128,
+    elem_bytes: int = 2,
+    shared: bool = True,
+    capacity_frac: float = 0.5,
+    capacity_bytes: Optional[float] = None,
+    snake_group: Optional[int] = None,
+):
+    """LRU shared-buffer model of a shared-prefix ragged serve step stream.
+
+    Plays ``core.cache_sim.shared_prefix_decode_trace`` — n_rows sequences
+    with a common ``prefix_pages``-page prompt prefix, interleaved in the
+    step-level lock-step visit order (``schedule.step_page_visits``), each
+    row's walk in its own sawtooth/block_snake parity — through an LRU of
+    ``capacity_frac`` × the *unshared* distinct K+V page bytes. Returns a
+    ``cache_sim.SimResult`` in bytes.
+
+    With ``shared=True`` the prefix pages are single physical copies (the
+    ``serve.kv_pool`` hash-dedup layout): every row past the first hits
+    them both in the LLC *and* as deduplicated cold misses, so both the
+    compulsory floor and the capacity misses drop versus the private-copy
+    layout — the serving-side locality axis the paper's traversal orders
+    act on once continuous batching shares pages across rows.
+    """
+    from repro.core.cache_sim import shared_prefix_decode_trace, simulate_trace
+
+    page_bytes = page * n_kv_heads * head_dim * elem_bytes
+    if capacity_bytes is None:
+        distinct = n_rows * (prefix_pages + -(-(own_tokens + n_steps) // page))
+        capacity_bytes = capacity_frac * 2 * distinct * page_bytes  # K+V
+    trace = (
+        (key, page_bytes)
+        for key in shared_prefix_decode_trace(
+            order,
+            n_rows,
+            prefix_pages,
+            [own_tokens] * n_rows,
+            n_steps,
+            page,
+            shared=shared,
+            snake_group=snake_group,
+        )
     )
     return simulate_trace(trace, capacity_bytes)

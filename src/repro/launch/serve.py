@@ -55,6 +55,14 @@ def main():
         "--scheduler", default="auto", choices=["auto", "static", "continuous"]
     )
     ap.add_argument("--page-size", type=int, default=None, help="KV page rows")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="tokens per ragged mixed step (decode rows + prefill "
+                         "chunks; default: batch size + one chunk)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens per prefill chunk (default: 4 pages)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the paged pool's content-hash prefix "
+                         "sharing / copy-on-write page dedup")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -75,6 +83,9 @@ def main():
         max_len=args.max_len,
         scheduler=pick_scheduler(args.scheduler, cfg),
         page_size=args.page_size,
+        token_budget=args.token_budget,
+        prefill_chunk=args.prefill_chunk,
+        prefix_sharing=not args.no_prefix_sharing,
     )
     rng = np.random.default_rng(0)
     reqs = [
@@ -91,6 +102,14 @@ def main():
     dt = time.time() - t0
     tok = sum(r.steps for r in results)
     print(f"served {len(results)} requests, {tok} tokens in {dt:.2f}s ({tok/dt:.1f} tok/s)")
+    stats = getattr(eng, "last_stats", None)
+    if stats:
+        print(
+            f"  {stats['mixed_steps']} mixed steps ({stats['wide_steps']} wide), "
+            f"{stats['pages_adopted']} prefix pages adopted "
+            f"({stats['prompt_tokens_adopted']} tokens), "
+            f"{stats['cow_forks']} CoW forks"
+        )
     for r in results[:4]:
         print(f"  rid={r.rid} -> {r.tokens.tolist()}")
 

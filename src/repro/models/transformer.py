@@ -117,17 +117,24 @@ def attn_decode(
     *,
     cross: bool = False,
 ):
-    """One-token decode. cache: {"k","v": (B,S_max,Hkv,hd), "len": scalar}."""
+    """Decode step. cache: {"k","v": (B,S_max,Hkv,hd), "len": scalar}.
+
+    The paged layout is *ragged*: ``x`` may carry C > 1 chunk positions per
+    row, with per-row valid counts in ``cache["q_len"]`` (default: all C) —
+    one call serves decode rows (q_len 1) and chunked-prefill rows (q_len
+    up to C) together. The contiguous layouts stay single-token.
+    """
     dt = cfg.activation_dtype()
     b, one, _ = x.shape
     hd = cfg.hd
-    q = L.dense(p["wq"], x, dtype=dt).reshape(b, 1, cfg.n_heads, hd)
+    q = L.dense(p["wq"], x, dtype=dt).reshape(b, -1, cfg.n_heads, hd)
     if not cross and "k_pages" in cache:
-        k = L.dense(p["wk"], x, dtype=dt).reshape(b, 1, cfg.n_kv_heads, hd)
-        v = L.dense(p["wv"], x, dtype=dt).reshape(b, 1, cfg.n_kv_heads, hd)
+        k = L.dense(p["wk"], x, dtype=dt).reshape(b, -1, cfg.n_kv_heads, hd)
+        v = L.dense(p["wv"], x, dtype=dt).reshape(b, -1, cfg.n_kv_heads, hd)
         o, cache = _attn_decode_paged(cfg, cache, q, k, v)
-        out = L.dense(p["wo"], o.reshape(b, 1, -1), dtype=dt)
+        out = L.dense(p["wo"], o.reshape(b, o.shape[1], -1), dtype=dt)
         return out, cache
+    assert one == 1, "contiguous decode takes a single query position"
     if not cross:
         pos = cache["len"]
         k = L.dense(p["wk"], x, dtype=dt).reshape(b, 1, cfg.n_kv_heads, hd)
@@ -158,42 +165,65 @@ def attn_decode(
     return out, cache
 
 
-def _attn_decode_paged(cfg: ModelConfig, cache: dict, q, k, v):
-    """One-token decode against a paged cache: per-row lengths, block-table
-    page write, schedule-ordered paged attention. Rows whose ``len`` is 0
-    (free continuous-batching slots) write into whatever page their block
-    table points at — the serving pool points free rows at a reserved dummy
-    page — and read back exact zeros."""
-    b = q.shape[0]
-    lens = cache["len"]  # (B,)
+def _paged_write(cfg: ModelConfig, cache: dict, k, v, starts, q_lens) -> dict:
+    """Chunked write-at-offset into a paged cache — THE paged write path.
+
+    k/v: (B, C, Hkv, hd) chunk values; row b's positions ``starts[b] + t``
+    for ``t < q_lens[b]`` are written through the block table (logical page
+    ``pos // page``, offset ``pos % page``). Invalid chunk rows (``t >=
+    q_len`` — padding of a ragged step, or inactive serve slots) are routed
+    to the reserved dummy page 0, so the fixed-shape scatter stays total.
+    Both prefill (``fill_cache``: starts 0, q_lens = S) and ragged serve
+    steps (decode rows at C=1, prefill chunks at C>1) funnel through here.
+    """
+    b, c = k.shape[:2]
     bt = cache["block_table"]
     page = cache["k_pages"].shape[1]
-    bpr = bt.shape[1]
-    capacity = bpr * page
+    capacity = bt.shape[1] * page
+    tq = jnp.arange(c, dtype=jnp.int32)[None, :]
+    pos = starts[:, None] + tq                             # (B, C)
+    valid = tq < q_lens[:, None]
+    wpos = jnp.minimum(pos, capacity - 1)  # clamp like the contiguous path
+    page_log = wpos // page
+    offset = wpos % page
+    phys = jnp.take_along_axis(bt, page_log, axis=1)       # (B, C)
+    phys = jnp.where(valid, phys, 0)                       # dummy page 0
 
-    positions = lens[:, None]  # (B, 1) per-row absolute positions
+    out = dict(cache)
+    for name, val in (("k_pages", k), ("v_pages", v)):
+        if cfg.kv_cache_dtype == "int8":
+            qv, sc = _quantize_kv(val)                     # (B,C,H,hd),(B,C,H)
+            out[name] = out[name].at[phys, offset].set(qv)
+            out[name + "_scale"] = out[name + "_scale"].at[phys, offset].set(sc)
+        else:
+            out[name] = out[name].at[phys, offset].set(val.astype(out[name].dtype))
+    return out
+
+
+def _attn_decode_paged(cfg: ModelConfig, cache: dict, q, k, v):
+    """Ragged chunk step against a paged cache: per-row lengths + valid
+    chunk counts, block-table write-at-offset, schedule-ordered ragged
+    paged attention (causal inside the chunk). Rows whose ``q_len`` is 0
+    (free continuous-batching slots) write only into the reserved dummy
+    page and read back exact zeros."""
+    b, c = q.shape[:2]
+    lens = cache["len"]  # (B,) tokens already cached (chunk positions follow)
+    bt = cache["block_table"]
+    page = cache["k_pages"].shape[1]
+    capacity = bt.shape[1] * page
+    q_lens = cache.get("q_len")
+    if q_lens is None:
+        q_lens = jnp.full((b,), c, jnp.int32)
+
+    positions = lens[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # (B, C)
     q = L.rope(q, positions, theta=cfg.rope_theta)
     k = L.rope(k, positions, theta=cfg.rope_theta)
 
-    write_pos = jnp.minimum(lens, capacity - 1)  # clamp like the contiguous path
-    page_log = write_pos // page
-    offset = write_pos % page
-    phys = jnp.take_along_axis(bt, page_log[:, None], axis=1)[:, 0]
-
     cache = dict(cache)
-    for name, val in (("k_pages", k), ("v_pages", v)):
-        vec = val[:, 0]  # (B, Hkv, hd)
-        if cfg.kv_cache_dtype == "int8":
-            qv, sc = _quantize_kv(vec)
-            cache[name] = cache[name].at[phys, offset].set(qv)
-            cache[name + "_scale"] = cache[name + "_scale"].at[phys, offset].set(sc)
-        else:
-            cache[name] = cache[name].at[phys, offset].set(
-                vec.astype(cache[name].dtype)
-            )
-    cache["len"] = lens + 1
+    cache = _paged_write(cfg, cache, k, v, lens, q_lens)
+    cache["len"] = lens + q_lens
 
-    valid = jnp.minimum(lens + 1, capacity)
+    valid = jnp.minimum(lens + q_lens, capacity)
     o = ops.attention_decode(
         q,
         _cache_read(cfg, cache, "k_pages"),
@@ -203,6 +233,7 @@ def _attn_decode_paged(cfg: ModelConfig, cache: dict, q, k, v):
         snake_group=cfg.snake_group,
         impl=cfg.attn_impl,
         block_table=bt,
+        q_lens=q_lens,
     )
     return o, cache
 
@@ -328,22 +359,19 @@ def fill_cache(cfg: ModelConfig, cache: dict, k: jax.Array, v: jax.Array) -> dic
 
 def _fill_cache_paged(cfg: ModelConfig, cache: dict, k: jax.Array, v: jax.Array) -> dict:
     b, s = k.shape[:2]
-    n_pages, page, h, d = cache["k_pages"].shape
-    bpr = cache["block_table"].shape[1]
-    capacity = bpr * page
+    page = cache["k_pages"].shape[1]
+    capacity = cache["block_table"].shape[1] * page
     if s > capacity:
         k, v = k[:, -capacity:], v[:, -capacity:]
         s = capacity
-    out = dict(cache)
-    for name, val in (("k_pages", k), ("v_pages", v)):
-        val = jnp.pad(val, ((0, 0), (0, capacity - s), (0, 0), (0, 0)))
-        pages = val.reshape(b * bpr, page, h, d)
-        if cfg.kv_cache_dtype == "int8":
-            qv, sc = _quantize_kv(pages)
-            out[name] = qv
-            out[name + "_scale"] = sc
-        else:
-            out[name] = pages.astype(cache[name].dtype)
+    out = _paged_write(
+        cfg,
+        cache,
+        k,
+        v,
+        jnp.zeros((b,), jnp.int32),
+        jnp.full((b,), s, jnp.int32),
+    )
     out["len"] = jnp.full((b,), s, jnp.int32)
     return out
 

@@ -5,8 +5,8 @@ from repro.serve.engine import (
     ServeEngine,
     supports_continuous,
 )
-from repro.serve.kv_pool import PagedKVPool, PagePool
-from repro.serve.scheduler import ContinuousScheduler, Slot
+from repro.serve.kv_pool import PagedKVPool, PagePool, assemble_cache_view
+from repro.serve.scheduler import ContinuousScheduler, Slot, StepItem
 
 __all__ = [
     "CONTINUOUS_FAMILIES",
@@ -16,6 +16,8 @@ __all__ = [
     "supports_continuous",
     "PagedKVPool",
     "PagePool",
+    "assemble_cache_view",
     "ContinuousScheduler",
     "Slot",
+    "StepItem",
 ]

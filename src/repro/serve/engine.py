@@ -10,13 +10,19 @@ Two schedulers (``repro.serve.scheduler``):
   decode_step``).
 
 * ``scheduler="continuous"`` — continuous batching over a shared paged KV
-  pool (``repro.serve.kv_pool``): each request owns a slot in a persistent
-  decode batch and a block-table row in the pool; requests are admitted the
-  moment a slot plus enough pages free up (mid-decode, honoring per-request
-  ``arrival`` times) and retire individually, so short requests never idle
-  behind long ones. Decode visits the pool's pages in the paper's
-  ``KVSchedule`` order (sawtooth parity driven by each row's cache length).
-  Requires a token-only full-attention family (dense / moe).
+  pool (``repro.serve.kv_pool``) driven by ONE compiled **ragged mixed
+  step**: each step, every decoding slot contributes a q_len=1 row and the
+  remaining token budget is dealt to prompts as prefill chunks (per-row
+  ``q_start``/``q_len``, causal masking inside the chunk, sampling only on
+  rows that completed their prompt). Long prompts are chunk-preempted
+  instead of stalling decode; the whole path compiles exactly two step
+  shapes (chunk width and decode width 1) no matter how many distinct
+  prompt lengths arrive. Identical prompt prefixes are deduplicated in the
+  pool: full prompt pages are content-hashed, admission *adopts* matching
+  pages (refcount bump, zero prefill compute) and copy-on-write forks the
+  tail page when a shared page must be written. Pages are visited in the
+  paper's ``KVSchedule`` order (sawtooth parity keyed per row on the
+  visited length). Requires a token-only full-attention family (dense/moe).
 
 Sampling is per-row in both paths: each request is sampled with its own
 temperature and a PRNG stream folded from (engine seed, request seed —
@@ -25,14 +31,16 @@ per-request sample index). A greedy request batched next to a sampling
 request stays greedy, and a request's sampled stream does not depend on
 which slot or group it landed in.
 
-On TPU the decode step uses the Pallas flash-decode kernel with the
-schedule from the paper's technique; on CPU it uses the jnp path.
+On TPU the mixed step uses the ragged Pallas paged-attention kernel with
+the schedule from the paper's technique; on CPU it uses the blockwise XLA
+path.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -76,7 +84,7 @@ class Request:
                                   # request's submission index so identical
                                   # requests sample independently
     eos_id: Optional[int] = None  # overrides ModelConfig.eos_id
-    arrival: int = 0              # decode-step arrival time (continuous only)
+    arrival: int = 0              # step arrival time (continuous only)
 
 
 @dataclasses.dataclass
@@ -84,6 +92,8 @@ class GenerationResult:
     rid: int
     tokens: np.ndarray            # generated tokens (without prompt)
     steps: int
+    ttft_s: float = 0.0           # wall time, engine start -> first token
+    tpot_s: float = 0.0           # mean wall time per token after the first
 
 
 @jax.jit
@@ -105,15 +115,6 @@ def _sample_rows(logits: jax.Array, temps: jax.Array, keys: jax.Array) -> jax.Ar
     return jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32)
 
 
-def _bucket_len(n: int, cap: int, page: int) -> int:
-    """Prefill bucket: the prompt rounded up to whole pages, capped at the
-    cache capacity. Page-multiple buckets keep the per-request capacity
-    clamp tight (a pow2 bucket near cap would eat the decode budget) and
-    match the pool's allocation granularity; the distinct-bucket count —
-    i.e. prefill compilations — is bounded by blocks-per-sequence."""
-    return min(max(page, -(-n // page) * page), cap)
-
-
 class ServeEngine:
     def __init__(
         self,
@@ -127,6 +128,9 @@ class ServeEngine:
         pcfg: Optional[ParallelConfig] = None,
         scheduler: str = "static",
         page_size: Optional[int] = None,
+        token_budget: Optional[int] = None,
+        prefill_chunk: Optional[int] = None,
+        prefix_sharing: bool = True,
     ):
         """Pass ``mesh`` (+ optional ParallelConfig) for sharded serving:
         params are placed on their TP/FSDP shardings and every step runs
@@ -134,7 +138,12 @@ class ServeEngine:
 
         ``scheduler="continuous"`` rebuilds the model under the paged KV
         layout (``page_size`` pages, default ``kv_block``) and serves with
-        continuous batching; ``"static"`` keeps the fixed-group path."""
+        the token-budget ragged mixed step: ``token_budget`` tokens per
+        step (default: one per slot plus one prefill chunk) split across
+        decode rows and ``prefill_chunk``-token prompt chunks (default: 4
+        pages). ``prefix_sharing=False`` disables the pool's content-hash
+        page dedup (for A/B measurement). ``"static"`` keeps the
+        fixed-group path."""
         if scheduler not in ("static", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if scheduler == "continuous":
@@ -148,10 +157,13 @@ class ServeEngine:
             page = min(page_size or cfg.page_size or cfg.kv_block, max_len)
             lm = build_model(cfg.with_(kv_layout="paged", page_size=page))
             self._page = page
+            self._chunk = max(1, min(prefill_chunk or 4 * page, max_len))
+            self._budget = token_budget
         self.scheduler = scheduler
         self.lm = lm
         self.mesh = mesh
         self.eos = lm.cfg.eos_id
+        self.prefix_sharing = prefix_sharing
         # Cache capacity model, shared by validation here and the budgeting
         # in _generate_batch: prefill writes bucket + prefix tokens (VLM
         # prepends prefix embeddings) and decode writes max_new - 1 more
@@ -182,7 +194,8 @@ class ServeEngine:
         self.key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(lambda p, b: lm.prefill(p, b, max_len))
         self._decode = jax.jit(lm.decode_step)
-        self._prefill_buckets: dict[int, object] = {}
+        self._mixed_step = None       # single jitted ragged step (continuous)
+        self._step_widths: set[int] = set()
 
     def _mesh_ctx(self):
         return (
@@ -224,15 +237,16 @@ class ServeEngine:
         if self.scheduler == "continuous":
             return self._generate_continuous(requests)
         results: list[GenerationResult] = []
+        t0 = time.perf_counter()  # TTFT includes queueing behind earlier groups
         for i in range(0, len(requests), self.batch_size):
             group = list(requests[i : i + self.batch_size])
-            results.extend(self._generate_batch(group, base_idx=i))
+            results.extend(self._generate_batch(group, base_idx=i, t0=t0))
         return results
 
     # ---- static path ---------------------------------------------------------
 
     def _generate_batch(
-        self, group: Sequence[Request], base_idx: int = 0
+        self, group: Sequence[Request], base_idx: int = 0, t0: Optional[float] = None
     ) -> list[GenerationResult]:
         # Prompts get priority for the bounded capacity (see __init__ for
         # the capacity model); a request whose max_new_tokens exceeds what
@@ -264,6 +278,7 @@ class ServeEngine:
         else:
             batch = {"tokens": tokens}
 
+        t0 = time.perf_counter() if t0 is None else t0
         with self._mesh_ctx():
             logits, caches = self._prefill(self.params, batch)
         generated = np.zeros((len(group), max_new), np.int32)
@@ -280,7 +295,11 @@ class ServeEngine:
         temps = jnp.asarray(temps_np)
         seeds = jnp.asarray(seeds_np)
 
-        cur = self._sample(logits[:, -1], temps, seeds, 0)
+        cur = jax.block_until_ready(self._sample(logits[:, -1], temps, seeds, 0))
+        # Group-shared TTFT (one fused prefill+sample), measured from engine
+        # start so queueing behind earlier groups counts; blocked first —
+        # dispatch is async, the unforced timestamp would exclude device time.
+        ttft = time.perf_counter() - t0
         for t in range(max_new):
             for j in range(len(group)):
                 if not done[j]:
@@ -293,9 +312,16 @@ class ServeEngine:
             with self._mesh_ctx():
                 logits, caches = self._decode(self.params, cur, caches)
             cur = self._sample(logits[:, -1], temps, seeds, t + 1)
+        total = time.perf_counter() - t0
 
         return [
-            GenerationResult(rid=r.rid, tokens=generated[j, : steps[j]], steps=int(steps[j]))
+            GenerationResult(
+                rid=r.rid,
+                tokens=generated[j, : steps[j]],
+                steps=int(steps[j]),
+                ttft_s=ttft,
+                tpot_s=(total - ttft) / max(int(steps[j]) - 1, 1),
+            )
             for j, r in enumerate(group)
         ]
 
@@ -306,41 +332,49 @@ class ServeEngine:
 
     # ---- continuous path -----------------------------------------------------
     #
-    # The decode loop runs one fused jitted step per token: assemble the
-    # cache view (pages + block tables + lens), decode, sample per-row —
-    # a single dispatch, so the scheduler's fewer-steps win is not eaten
-    # by per-step host overhead. Admission is likewise one fused
-    # prefill+sample call per request (cached per prompt bucket).
+    # One fused jitted RAGGED MIXED STEP per iteration: assemble the cache
+    # view (pages + block tables + per-row q_start/q_len), run the ragged
+    # chunk through the model, sample the last valid position of every row
+    # — a single dispatch, so the scheduler's fewer-steps win is not eaten
+    # by per-step host overhead. The step compiles at exactly two widths
+    # (1 for decode-only steps, prefill_chunk otherwise) regardless of how
+    # many distinct prompt lengths the stream carries — the per-bucket
+    # prefill jit cache of the previous design (unbounded compilation
+    # growth) is gone, as is the separate decode-only step.
 
-    def _prefill_for(self, bucket: int):
-        fn = self._prefill_buckets.get(bucket)
-        if fn is None:
-            lm, base = self.lm, self.key
-
-            def prefill_sample(params, batch, temp, seed, _n=bucket):
-                logits, caches = lm.prefill(params, batch, _n)
-                key = _row_keys(base, seed, jnp.zeros((1,), jnp.int32))
-                tok = _sample_rows(logits[:, -1], temp, key)
-                return tok, caches
-
-            fn = jax.jit(prefill_sample)
-            self._prefill_buckets[bucket] = fn
-        return fn
-
-    def _cont_step_fn(self):
-        if getattr(self, "_cont_step", None) is None:
+    def _mixed_step_fn(self):
+        if self._mixed_step is None:
             lm, base = self.lm, self.key
             n_layers = lm.cfg.n_layers
 
-            def step(params, cur, pages, bt, lens, temps, seeds, counts):
-                caches = assemble_cache_view(pages, bt, lens, n_layers)
-                logits, caches = lm.decode_step(params, cur, caches)
+            def step(params, tokens, pages, bt, lens, qlens, temps, seeds, counts):
+                caches = assemble_cache_view(pages, bt, lens, n_layers, qlens)
+                logits, caches = lm.decode_step(params, tokens, caches)
+                # Each row samples at its last valid chunk position (the
+                # prompt's final token for a finishing prefill row, the
+                # freshly written position for a decode row).
+                last = jnp.maximum(qlens - 1, 0)
+                logits = jnp.take_along_axis(
+                    logits, last[:, None, None], axis=1
+                )[:, 0]
                 keys = _row_keys(base, seeds, counts)
-                toks = _sample_rows(logits[:, -1], temps, keys)
+                toks = _sample_rows(logits, temps, keys)
                 return toks, {name: caches[name] for name in pages}
 
-            self._cont_step = jax.jit(step)
-        return self._cont_step
+            self._mixed_step = jax.jit(step)
+        return self._mixed_step
+
+    def compiled_step_count(self) -> int:
+        """Number of compiled variants of the continuous mixed step (the
+        compile-counter regression surface: O(1) — at most two widths — for
+        any stream of prompt lengths). Reads the jit cache itself when the
+        runtime exposes it; the engine-tracked width set is the fallback."""
+        if self._mixed_step is None:
+            return 0
+        counter = getattr(self._mixed_step, "_cache_size", None)
+        if counter is not None:
+            return int(counter())
+        return len(self._step_widths)  # pragma: no cover
 
     def _generate_continuous(
         self, requests: Sequence[Request]
@@ -348,62 +382,88 @@ class ServeEngine:
         cfg = self.lm.cfg
         n_slots = self.batch_size
         cap = self._cap
-        sched = ContinuousScheduler(n_slots)
+        sched = ContinuousScheduler(
+            n_slots, token_budget=self._budget, prefill_chunk=self._chunk
+        )
         sched.submit(list(requests))
         idx_of = {id(r): i for i, r in enumerate(requests)}  # default seeds
-        pool = PagedKVPool(cfg, cfg.n_layers, n_slots, cap)
+        pool = PagedKVPool(
+            cfg, cfg.n_layers, n_slots, cap, prefix_sharing=self.prefix_sharing
+        )
+        self.last_pool = pool  # exposed for benches/tests (sharing counters)
 
         results: dict[int, GenerationResult] = {}
-        cur = np.full((n_slots, 1), self.eos, np.int32)
+        cur = np.full((n_slots,), self.eos, np.int32)  # last sampled token
         temps = np.zeros((n_slots,), np.float32)
         seeds = np.zeros((n_slots,), np.int32)
         counts = np.zeros((n_slots,), np.int32)
+        t0 = time.perf_counter()
+        first_t: dict[int, float] = {}
 
         def finish(slot: int) -> None:
             st = sched.retire(slot)
             pool.release(slot)
-            cur[slot, 0] = self.eos
+            cur[slot] = self.eos
             temps[slot] = 0.0
             r = st.request
+            now = time.perf_counter()
+            n_tok = len(st.generated)
+            ttft = first_t.pop(id(r), now) - t0
             results[id(r)] = GenerationResult(
                 rid=r.rid,
                 tokens=np.asarray(st.generated, np.int32),
-                steps=len(st.generated),
+                steps=n_tok,
+                ttft_s=ttft,
+                tpot_s=((now - t0) - ttft) / max(n_tok - 1, 1),
             )
 
+        step_fn = self._mixed_step_fn()
         step = 0
+        n_steps = n_wide = 0  # deterministic per-stream work counters
         while sched.has_work():
             # Admission: fill free slots with arrived requests while the
-            # pool can reserve their worst case.
+            # pool can reserve their (sharing-reduced) worst case.
             while (slot := sched.free_slot()) is not None:
                 req = sched.pop_admissible(step)
                 if req is None:
                     break
-                if not self._admit(
-                    req, slot, sched, pool, cur, temps, seeds, counts, idx_of[id(req)]
-                ):
+                if not self._admit(req, slot, sched, pool, temps, seeds, counts,
+                                   idx_of[id(req)]):
                     sched.requeue(req)  # no pages yet; retry after retirements
                     break
-                if sched.slots[slot].done:  # first token was already terminal
+                if sched.slots[slot].done:  # zero-limit request: emits nothing
                     finish(slot)
 
-            active = sched.active_slots()
-            if not active:
+            plan = sched.plan_step()
+            if not plan:
                 if sched.waiting:
                     nxt = sched.next_arrival()
                     step = max(step + 1, nxt if nxt is not None else step + 1)
                     continue
                 break
 
-            for slot in active:
-                pool.ensure_writable(slot)
+            width = 1 if all(it.q_len == 1 for it in plan) else self._chunk
+            self._step_widths.add(width)
+            tokens = np.full((n_slots, width), self.eos, np.int32)
+            qlens = np.zeros((n_slots,), np.int32)
+            for it in plan:
+                st = sched.slots[it.slot]
+                if it.is_prefill:
+                    seg = st.prompt[st.prompt_pos : st.prompt_pos + it.q_len]
+                    tokens[it.slot, : len(seg)] = seg
+                else:
+                    tokens[it.slot, 0] = cur[it.slot]
+                qlens[it.slot] = it.q_len
+                pool.ensure_writable(it.slot, it.q_len)  # grow + CoW forks
+
             with self._mesh_ctx():
-                toks_dev, pages = self._cont_step_fn()(
+                toks_dev, pages = step_fn(
                     self.params,
-                    jnp.asarray(cur),
+                    jnp.asarray(tokens),
                     pool.pages,
                     pool.block_tables,
                     pool.lens,
+                    qlens,
                     temps,
                     seeds,
                     counts,
@@ -411,46 +471,69 @@ class ServeEngine:
             pool.update_pages(pages)
             toks = np.asarray(toks_dev)
             step += 1
-            for slot in active:
-                st = sched.slots[slot]
-                pool.advance(slot)
-                counts[slot] += 1
-                tok = int(toks[slot])
-                cur[slot, 0] = tok
+            n_steps += 1
+            n_wide += width > 1
+            for it in plan:
+                st = sched.slots[it.slot]
+                pool.advance(it.slot, it.q_len)
+                if it.is_prefill:
+                    st.prompt_pos += it.q_len
+                    if not it.finishes_prompt:
+                        continue
+                    # Prompt complete: publish its frozen pages for future
+                    # admissions to adopt, then take the first sample.
+                    pool.register_prompt(it.slot, st.prompt)
+                tok = int(toks[it.slot])
+                if id(st.request) not in first_t:
+                    first_t[id(st.request)] = time.perf_counter()
+                counts[it.slot] += 1
+                cur[it.slot] = tok
                 if st.record(tok):
-                    finish(slot)
+                    finish(it.slot)
 
+        # Deterministic work counters for benches / CI trend lines (wall
+        # clock on a shared CI box is noisy; step counts are not).
+        self.last_stats = {
+            "mixed_steps": n_steps,
+            "wide_steps": n_wide,
+            "pages_adopted": pool.shared_hits,
+            "prompt_tokens_adopted": pool.shared_tokens,
+            "cow_forks": pool.cow_forks,
+        }
         return [results[id(r)] for r in requests]
 
     def _admit(
-        self, req: Request, slot: int, sched, pool, cur, temps, seeds, counts, idx: int
+        self, req: Request, slot: int, sched, pool, temps, seeds, counts, idx: int
     ) -> bool:
-        """Prefill ``req`` into ``slot``; False if the pool lacks pages."""
+        """Admit ``req`` into ``slot``; False if the pool lacks pages.
+
+        No prefill happens here — the prompt's non-shared tokens run
+        through the mixed step as chunks. The pool adopts any registered
+        shared prefix (its KV is already resident), so ``prompt_pos``
+        starts past the adopted tokens.
+        """
         cap = self._cap
         prompt = np.asarray(req.tokens, np.int32)[-cap:]
-        bucket = _bucket_len(max(1, len(prompt)), cap, self._page)
-        new_limit = max(0, min(req.max_new_tokens, cap - bucket + 1))
+        if len(prompt) == 0:
+            prompt = np.full((1,), self.eos, np.int32)  # empty prompt -> 1 pad
+        new_limit = max(0, min(req.max_new_tokens, cap - len(prompt) + 1))
         if new_limit == 0:
             # Nothing to emit — resolve without consuming pages.
             st = sched.place(slot, req, eos_id=self._eos_for(req), new_limit=0)
             st.done = True
             return True
-        if not pool.can_admit(bucket, new_limit):
+        shared = pool.admit(slot, prompt, new_limit)
+        if shared is None:
             return False
-        tokens = self._pad_batch([prompt], batch=1, bucket=bucket)
-        with self._mesh_ctx():
-            tok_dev, caches = self._prefill_for(bucket)(
-                self.params,
-                {"tokens": tokens},
-                jnp.asarray([req.temperature], jnp.float32),
-                jnp.asarray([self._seed_for(req, idx)], jnp.int32),
-            )
-        pool.insert(slot, caches, bucket, new_limit)
-        st = sched.place(slot, req, eos_id=self._eos_for(req), new_limit=new_limit)
+        sched.place(
+            slot,
+            req,
+            eos_id=self._eos_for(req),
+            new_limit=new_limit,
+            prompt=prompt,
+            prompt_pos=shared,
+        )
         temps[slot] = req.temperature
         seeds[slot] = self._seed_for(req, idx)
-        tok = int(np.asarray(tok_dev)[0])
-        counts[slot] = 1
-        cur[slot, 0] = tok
-        st.record(tok)
+        counts[slot] = 0
         return True

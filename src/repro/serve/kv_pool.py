@@ -1,4 +1,5 @@
-"""Shared paged KV pool for continuous-batching serving.
+"""Shared paged KV pool for continuous-batching serving, with refcounted
+copy-on-write prefix sharing.
 
 One physical page pool per layer (stacked on a leading L axis, matching the
 scanned cache pytrees the models produce) is shared by every running
@@ -8,21 +9,39 @@ pages to physical pool pages. Page size equals the schedule's ``kv_block``
 KV tile of the paper's traversal schedule and the decode kernels walk the
 table in ``KVSchedule`` order (DESIGN.md §8).
 
-Page 0 is a reserved dummy: free slots point their block tables at it, so
-the (fixed-shape, whole-batch) decode step can write the masked-out token
-of an empty slot somewhere harmless.
+Page 0 is a reserved dummy: free slots — and the invalid rows of a ragged
+mixed step — point their writes at it, so the fixed-shape whole-batch step
+can write masked-out tokens somewhere harmless.
 
-Allocation is lazy (a sequence holds pages for the tokens it has, growing
-one page at a time as decode crosses page boundaries) with worst-case
-admission reservation: a request is admitted only if the pool can cover its
-prompt bucket plus its full ``max_new_tokens`` on top of every running
-sequence's outstanding reservation — so ``grow`` never fails mid-flight and
-no preemption machinery is needed. int8 pools (``kv_cache_dtype='int8'``)
-carry the per-vector scales from ``repro.dist.compression`` as parallel
-page arrays and halve the pool's HBM footprint.
+**Prefix sharing.** Every physical page carries a refcount. Full prompt
+pages are registered in a content-hash registry (a rolling hash over the
+chain of page token contents, with exact token comparison on lookup, so
+hash collisions are harmless): when a new prompt's leading pages match a
+registered chain, ``admit`` *adopts* those pages — refcount bump, zero
+prefill compute, zero copies — instead of recomputing and re-storing them.
+A partially-matching tail page is adopted too (its extra positions are
+masked by the row's ``len``); the first write into it triggers
+copy-on-write in :meth:`PagedKVPool.ensure_writable` — fork to a fresh
+page, decrement the shared page's refcount. ``release`` decrements
+refcounts and frees+unregisters pages that hit zero, so sharing survives
+the donor's retirement for as long as any adopter still holds the pages.
+
+Allocation is lazy (a sequence materializes owned pages as its writes cross
+page boundaries) with worst-case admission reservation: a request is
+admitted only if the pool can cover its *non-shared* worst case — prompt +
+full ``max_new_tokens``, minus the adopted pages that can never be written —
+on top of every running sequence's outstanding reservation, so ``grow`` and
+CoW forks never fail mid-flight and no preemption machinery is needed. int8
+pools (``kv_cache_dtype='int8'``) carry the per-vector scales from
+``repro.dist.compression`` as parallel page arrays and halve the pool's HBM
+footprint.
 """
 
 from __future__ import annotations
+
+import functools
+import zlib
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,19 +53,26 @@ from repro.models import transformer as T
 __all__ = ["PagePool", "PagedKVPool", "assemble_cache_view"]
 
 
-def assemble_cache_view(pages: dict, block_table, lens, n_layers: int) -> dict:
+def assemble_cache_view(
+    pages: dict, block_table, lens, n_layers: int, q_lens=None
+) -> dict:
     """Splice block tables + lengths into a page pytree for ``decode_step``.
 
     Block tables and lengths are tiled across the layer axis because the
     scanned decode carries one copy per layer (a few KB — uniformity with
-    the contiguous cache pytree is worth more than the bytes). Traceable:
-    the engine calls this inside its fused jitted decode step.
+    the contiguous cache pytree is worth more than the bytes). ``q_lens``
+    (B,) adds the ragged mixed step's per-row valid chunk counts
+    (``transformer.attn_decode`` reads it as ``cache["q_len"]``). Traceable:
+    the engine calls this inside its fused jitted mixed step.
     """
     view = dict(pages)
     bt = jnp.asarray(block_table)
     ln = jnp.asarray(lens)
     view["block_table"] = jnp.broadcast_to(bt, (n_layers,) + bt.shape)
     view["len"] = jnp.broadcast_to(ln, (n_layers,) + ln.shape)
+    if q_lens is not None:
+        ql = jnp.asarray(q_lens)
+        view["q_len"] = jnp.broadcast_to(ql, (n_layers,) + ql.shape)
     return view
 
 
@@ -82,20 +108,34 @@ class PagePool:
         self._free.extend(int(i) for i in ids)
 
 
-@jax.jit
-def _scatter_pages(dst: jax.Array, src: jax.Array, ids: jax.Array) -> jax.Array:
-    """dst (L, P, ...) <- src (L, n, ...) at physical pages ``ids`` (n,)."""
-    return dst.at[:, ids].set(src.astype(dst.dtype))
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page(dst: jax.Array, src_id: jax.Array, dst_id: jax.Array) -> jax.Array:
+    """dst (L, P, ...): physical page ``src_id`` copied onto ``dst_id``.
+
+    The pool buffer is donated — callers always rebind ``pages[name]`` to
+    the result — so a CoW fork updates in place (O(page) traffic) instead
+    of cloning the whole pool per leaf (backends without donation fall back
+    to the copy with a one-time warning)."""
+    return dst.at[:, dst_id].set(dst[:, src_id])
+
+
+def _hash_step(h: int, page_tokens: np.ndarray) -> int:
+    """One link of the rolling prompt-page content hash. Collisions are
+    harmless — every registry hit is verified by exact token comparison."""
+    return zlib.crc32(np.ascontiguousarray(page_tokens, np.int32).tobytes(), h)
 
 
 class PagedKVPool:
-    """Device page pool + host block tables / lengths / reservations.
+    """Device page pool + host block tables / lengths / refcounts / registry.
 
     The device side is a dict of stacked leaves shaped like the per-layer
     paged caches from ``transformer.init_cache`` with a leading layer axis,
     which is exactly what ``stack_decode`` scans — ``caches_view()`` splices
     the host block tables and lengths in, and ``update_pages()`` takes the
-    written pages back after a decode step.
+    written pages back after a mixed step. K/V values are *produced* by the
+    engine's ragged mixed step writing at per-row offsets
+    (``transformer._paged_write``); the pool itself never copies prefill
+    caches — admission only adopts (shared) or reserves (owned) pages.
     """
 
     def __init__(
@@ -106,11 +146,13 @@ class PagedKVPool:
         max_len: int,
         *,
         dtype=None,
+        prefix_sharing: bool = True,
     ):
         if cfg.window is not None:
             raise ValueError("paged KV pools require full attention (window=None)")
         self.cfg = cfg
         self.n_slots = n_slots
+        self.prefix_sharing = prefix_sharing
         self.page, self.blocks_per_seq = T.page_geometry(cfg, max_len)
         self.capacity = self.blocks_per_seq * self.page
         n_pages = n_slots * self.blocks_per_seq + 1  # +1 reserved dummy page 0
@@ -129,8 +171,20 @@ class PagedKVPool:
 
         self.block_tables = np.zeros((n_slots, self.blocks_per_seq), np.int32)
         self.lens = np.zeros((n_slots,), np.int32)
+        self._ref = np.zeros((n_pages,), np.int32)
         self._slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
-        self._slot_worst: list[int] = [0] * n_slots
+        self._slot_reserved: list[int] = [0] * n_slots
+        # Prefix registry: parent-chain-hash -> (physical page, its tokens).
+        # Weak entries — a page is unregistered the moment it is freed or its
+        # sole owner is about to overwrite it, so a registry hit (verified by
+        # token equality) always points at live, correct KV.
+        self._chain_next: dict[int, tuple[int, np.ndarray]] = {}
+        self._page_parent: dict[int, int] = {}
+        # Counters for benches/tests: pages / prompt tokens adopted instead
+        # of recomputed, and CoW forks performed.
+        self.shared_hits = 0
+        self.shared_tokens = 0
+        self.cow_forks = 0
 
     # ---- admission / lifecycle ----------------------------------------------
 
@@ -138,71 +192,224 @@ class PagedKVPool:
         return -(-n_tokens // self.page)
 
     def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        """Worst-case admissibility ignoring prefix sharing (sharing only
+        ever *reduces* the requirement; ``admit`` checks the exact one)."""
         worst = self.pages_for(min(prompt_len + max_new, self.capacity))
         return self.alloc.available >= worst
 
-    def insert(self, slot: int, caches, prompt_len: int, max_new: int) -> None:
-        """Adopt a freshly prefilled B=1 paged cache pytree into ``slot``.
+    def match_prefix(self, prompt: np.ndarray) -> tuple[int, list[int]]:
+        """Longest registered prefix of ``prompt``: (tokens covered, pages).
 
-        ``caches`` comes from ``lm.prefill`` under the paged config with
-        ``max_len == prompt bucket``: page leaves are (L, n_src, page, H, D)
-        in identity order, so copying rows [0, pages_for(prompt_len)) into
-        newly allocated physical pages is the whole insertion.
+        Walks the rolling-hash chain over full prompt pages, verifying token
+        contents at every link; a final *partial* page match (the registered
+        page's leading tokens equal the prompt's remaining tokens) is adopted
+        too — its first write CoW-forks. Coverage is capped at
+        ``len(prompt) - 1``: the last prompt token must always run through
+        the model to produce the first sampled logit.
         """
-        if self._slot_pages[slot]:
+        prompt = np.asarray(prompt, np.int32)
+        if not self.prefix_sharing or len(prompt) <= 1:
+            return 0, []
+        page = self.page
+        limit = min(len(prompt) - 1, self.capacity)
+        h, covered, pids = 0, 0, []
+        while covered < limit:
+            ent = self._chain_next.get(h)
+            if ent is None:
+                break
+            pid, ptoks = ent
+            seg = prompt[covered : covered + page]
+            if (
+                len(seg) == page
+                and covered + page <= limit
+                and np.array_equal(ptoks, seg)
+            ):
+                pids.append(pid)
+                covered += page
+                h = _hash_step(h, ptoks)
+                continue
+            rem = prompt[covered:limit]
+            if rem.size and np.array_equal(ptoks[: rem.size], rem):
+                pids.append(pid)
+                covered = limit
+            break
+        return covered, pids
+
+    def admit(self, slot: int, prompt: np.ndarray, max_new: int) -> Optional[int]:
+        """Admit a request into ``slot``: adopt the shared prefix, reserve
+        the owned worst case. Returns the number of prompt tokens whose KV
+        was adopted (0 if none), or None when the pool lacks pages.
+
+        No K/V is copied and nothing is prefilled here — the engine's ragged
+        mixed step computes the non-shared tokens chunk by chunk, writing
+        through the block table into lazily materialized owned pages.
+        """
+        if self._slot_pages[slot] or self.lens[slot]:
             raise RuntimeError(f"slot {slot} is occupied")
-        n = self.pages_for(prompt_len)
+        prompt = np.asarray(prompt, np.int32)
+        prompt_len = min(len(prompt), self.capacity)
+        covered, pids = self.match_prefix(prompt)
+        # Adopted pages strictly below the write boundary are never touched
+        # again; a partially covered tail page will be CoW-forked (one page
+        # from the reservation) on its first write.
+        n_safe = covered // self.page
         worst = self.pages_for(min(prompt_len + max_new, self.capacity))
-        ids = self.alloc.alloc(n)
-        self.alloc.reserved += worst - n
-        self._slot_worst[slot] = worst
-        self._slot_pages[slot] = ids
-        idx = jnp.asarray(ids, jnp.int32)
-        for name in self.pages:
-            self.pages[name] = _scatter_pages(
-                self.pages[name], caches[name][:, :n], idx
-            )
+        need = worst - n_safe
+        if self.alloc.available < need:
+            return None
+        for pid in pids:
+            self._ref[pid] += 1
+        self.shared_hits += len(pids)
+        self.shared_tokens += covered
+        self._slot_pages[slot] = list(pids)
+        self._slot_reserved[slot] = need
+        self.alloc.reserved += need
         self.block_tables[slot] = 0
-        self.block_tables[slot, :n] = ids
-        self.lens[slot] = min(prompt_len, self.capacity)
+        self.block_tables[slot, : len(pids)] = pids
+        self.lens[slot] = covered
+        return covered
 
-    def ensure_writable(self, slot: int) -> None:
-        """Grow ``slot`` by one page if the next decode write needs it.
+    def _take_page(self, slot: int) -> int:
+        (pid,) = self.alloc.alloc(1)
+        self.alloc.reserved -= 1
+        self._slot_reserved[slot] -= 1
+        assert self._slot_reserved[slot] >= 0, "allocation beyond reservation"
+        self._ref[pid] = 1
+        return pid
 
-        Covered by the admission reservation, so allocation cannot fail for
-        a slot within its worst-case budget.
+    def _unregister(self, pid: int) -> None:
+        parent = self._page_parent.pop(pid, None)
+        if parent is not None and self._chain_next.get(parent, (None,))[0] == pid:
+            del self._chain_next[parent]
+
+    def ensure_writable(self, slot: int, n: int = 1) -> None:
+        """Make positions ``[len, len+n)`` of ``slot`` writable: materialize
+        missing pages, copy-on-write-fork shared ones, unregister a sole-
+        owned registered page about to diverge. Covered by the admission
+        reservation, so allocation cannot fail within the worst-case budget.
         """
-        owned = self._slot_pages[slot]
-        if self.lens[slot] >= len(owned) * self.page and len(owned) < self.blocks_per_seq:
-            (pid,) = self.alloc.alloc(1)
-            self.alloc.reserved -= 1
-            owned.append(pid)
-            self.block_tables[slot, len(owned) - 1] = pid
+        start = int(self.lens[slot])
+        end = min(start + n, self.capacity)
+        if end <= start:
+            return
+        held = self._slot_pages[slot]
+        for pg in range(start // self.page, (end - 1) // self.page + 1):
+            if pg < len(held):
+                pid = held[pg]
+                if self._ref[pid] > 1:
+                    nid = self._take_page(slot)
+                    self.cow_forks += 1
+                    for name in self.pages:
+                        self.pages[name] = _copy_page(
+                            self.pages[name],
+                            jnp.int32(pid),
+                            jnp.int32(nid),
+                        )
+                    self._ref[pid] -= 1
+                    held[pg] = nid
+                    self.block_tables[slot, pg] = nid
+                elif pid in self._page_parent:
+                    # Sole owner writing a registered page: its content is
+                    # about to diverge from the registered prompt chain.
+                    self._unregister(pid)
+            else:
+                pid = self._take_page(slot)
+                held.append(pid)
+                self.block_tables[slot, pg] = pid
 
-    def advance(self, slot: int) -> None:
-        """Record one decoded token (host mirror of the device len+1)."""
-        self.lens[slot] = min(self.lens[slot] + 1, self.capacity)
+    def advance(self, slot: int, n: int = 1) -> None:
+        """Record ``n`` written tokens (host mirror of the device len+q_len)."""
+        self.lens[slot] = min(self.lens[slot] + n, self.capacity)
+
+    def register_prompt(self, slot: int, prompt: np.ndarray) -> None:
+        """Publish ``slot``'s full prompt pages in the prefix registry.
+
+        Call once, when the slot's prompt is fully in cache and before its
+        first decode write. Only *frozen* pages are registered — the full
+        pages strictly inside the prompt, which no decode write can ever
+        touch. A chain link already registered with the same content is
+        *refreshed* to point at this slot's copy when it owns a distinct
+        one (so the chain survives the original donor's retirement as long
+        as ANY same-prefix sequence is still running); a divergent chain
+        occupying the hash link ends registration (first-wins).
+        """
+        if not self.prefix_sharing:
+            return
+        prompt = np.asarray(prompt, np.int32)
+        page = self.page
+        held = self._slot_pages[slot]
+        h = 0
+        for j in range(min(len(prompt) // page, len(held))):
+            ptoks = prompt[j * page : (j + 1) * page]
+            pid = held[j]
+            ent = self._chain_next.get(h)
+            if ent is not None and not np.array_equal(ent[1], ptoks):
+                break
+            if ent is None or ent[0] != pid:
+                if ent is not None:
+                    self._page_parent.pop(ent[0], None)
+                self._chain_next[h] = (pid, ptoks.copy())
+                self._page_parent[pid] = h
+            h = _hash_step(h, ptoks)
 
     def release(self, slot: int) -> None:
-        ids = self._slot_pages[slot]
-        self.alloc.free(ids)
-        self.alloc.reserved -= self._slot_worst[slot] - len(ids)
+        for pid in self._slot_pages[slot]:
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                self._unregister(pid)
+                self.alloc.free([pid])
+        self.alloc.reserved -= self._slot_reserved[slot]
         self._slot_pages[slot] = []
-        self._slot_worst[slot] = 0
+        self._slot_reserved[slot] = 0
         self.block_tables[slot] = 0
         self.lens[slot] = 0
 
-    # ---- decode-step plumbing ------------------------------------------------
+    # ---- invariants (property tests / debugging) -----------------------------
 
-    def caches_view(self) -> dict:
+    def check_invariants(self) -> None:
+        """Assert the pool's conservation + consistency invariants:
+        free + distinct-held == allocatable pages, per-page refcounts equal
+        the number of slots holding them, reservations are consistent, and
+        every block-table entry points at a held page (or the dummy)."""
+        held: dict[int, int] = {}
+        for pages in self._slot_pages:
+            assert len(set(pages)) == len(pages), "slot holds a page twice"
+            for pid in pages:
+                held[pid] = held.get(pid, 0) + 1
+        assert self.alloc.free_count + len(held) == self.alloc.n_pages - 1, (
+            f"page leak: free={self.alloc.free_count} held={len(held)} "
+            f"of {self.alloc.n_pages - 1}"
+        )
+        for pid, cnt in held.items():
+            assert pid != 0, "dummy page held by a slot"
+            assert self._ref[pid] == cnt, (pid, self._ref[pid], cnt)
+        assert (self._ref >= 0).all(), "negative refcount"
+        for pid in range(1, self.alloc.n_pages):
+            if pid not in held:
+                assert self._ref[pid] == 0, f"freed page {pid} has refs"
+                assert pid not in self._page_parent, f"freed page {pid} registered"
+        assert self.alloc.reserved == sum(self._slot_reserved) >= 0
+        for slot in range(self.n_slots):
+            n_logical = -(-int(self.lens[slot]) // self.page)
+            assert len(self._slot_pages[slot]) >= n_logical
+            for pg, pid in enumerate(self._slot_pages[slot]):
+                assert self.block_tables[slot, pg] == pid
+            for pg in range(len(self._slot_pages[slot]), self.blocks_per_seq):
+                assert self.block_tables[slot, pg] == 0
+        for parent, (pid, _) in self._chain_next.items():
+            assert self._page_parent.get(pid) == parent
+
+    # ---- step plumbing -------------------------------------------------------
+
+    def caches_view(self, q_lens=None) -> dict:
         """Cache pytree for ``decode_step``: pages + current tables/lens
         (host-authoritative), via :func:`assemble_cache_view`."""
         n_layers = next(iter(self.pages.values())).shape[0]
         return assemble_cache_view(
-            self.pages, self.block_tables, self.lens, n_layers
+            self.pages, self.block_tables, self.lens, n_layers, q_lens
         )
 
     def update_pages(self, caches: dict) -> None:
-        """Take back the page leaves written by a decode step."""
+        """Take back the page leaves written by a mixed step."""
         for name in self.pages:
             self.pages[name] = caches[name]

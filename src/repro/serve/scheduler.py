@@ -1,17 +1,25 @@
-"""Request schedulers: static groups vs continuous batching.
+"""Request schedulers: static groups vs token-budget continuous batching.
 
 The static scheduler reproduces the original engine behavior — requests are
 chopped into fixed ``batch_size`` groups and each group runs prefill + decode
 to completion before the next starts (a short request parked next to a long
 one holds its slot doing nothing).
 
-The continuous scheduler gives each request a *slot* in a persistent decode
-batch: requests are admitted the moment a slot and enough KV pages are free
-(including mid-decode), and retire individually on their own EOS /
-``max_new_tokens``, freeing the slot for the next waiting request. Admission
-is FIFO in arrival order, gated on the paged pool's worst-case reservation
-(`kv_pool.PagedKVPool.can_admit`), so a running sequence can never be
-starved of pages by a later admission. ``Request.arrival`` (a decode-step
+The continuous scheduler gives each request a *slot* in a persistent ragged
+batch and plans one **token-budget mixed step** at a time: every decoding
+slot contributes one q_len=1 row, and the remaining budget is split into
+prefill chunks (q_len up to ``prefill_chunk``, round-robin across slots
+still working through their prompts). A long prompt is therefore *preempted*
+by construction — it advances chunk by chunk while decode rows keep emitting
+every step and new arrivals keep being admitted — instead of stalling the
+whole batch for a monolithic prefill. Requests are admitted the moment a
+slot and enough KV pages are free (including mid-decode), and retire
+individually on their own EOS / ``max_new_tokens``, freeing the slot for the
+next waiting request.
+
+Admission is FIFO in arrival order, gated on the paged pool's worst-case
+reservation (`kv_pool.PagedKVPool.admit`), so a running sequence can never
+be starved of pages by a later admission. ``Request.arrival`` (a step
 timestamp, used by the serve benchmark to model staggered traffic) holds a
 request out of the queue until the engine's step counter reaches it.
 """
@@ -21,7 +29,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
-__all__ = ["Slot", "ContinuousScheduler"]
+import numpy as np
+
+__all__ = ["Slot", "StepItem", "ContinuousScheduler"]
 
 
 @dataclasses.dataclass
@@ -31,8 +41,16 @@ class Slot:
     request: object                   # serve.engine.Request
     eos_id: int
     new_limit: int                    # clamped max_new_tokens
+    prompt: np.ndarray = None         # clamped prompt tokens (1D int32)
+    prompt_pos: int = 0               # prompt tokens already in cache
+                                      # (shared-prefix adoption + chunks)
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+
+    @property
+    def prefilling(self) -> bool:
+        """Still working through the prompt (no token sampled yet)."""
+        return self.prompt is not None and self.prompt_pos < len(self.prompt)
 
     def record(self, token: int) -> bool:
         """Append a token; returns True when the sequence is finished."""
@@ -42,13 +60,38 @@ class Slot:
         return self.done
 
 
-class ContinuousScheduler:
-    """Admission queue + slot lifecycle for continuous batching."""
+@dataclasses.dataclass(frozen=True)
+class StepItem:
+    """One row of a planned mixed step."""
 
-    def __init__(self, n_slots: int):
+    slot: int
+    q_len: int
+    is_prefill: bool
+    finishes_prompt: bool = False     # this chunk covers the prompt's last
+                                      # token -> the row samples this step
+
+
+class ContinuousScheduler:
+    """Admission queue + slot lifecycle + per-step token budgeting."""
+
+    def __init__(
+        self,
+        n_slots: int,
+        *,
+        token_budget: Optional[int] = None,
+        prefill_chunk: int = 64,
+    ):
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.n_slots = n_slots
+        self.prefill_chunk = prefill_chunk
+        # Default: every decode row plus one full prefill chunk per step.
+        self.token_budget = token_budget or (n_slots + prefill_chunk)
+        if self.token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
         self.waiting: list = []
         self.slots: list[Optional[Slot]] = [None] * n_slots
+        self._rr = 0                  # round-robin cursor over prefill slots
 
     def submit(self, requests: Sequence) -> None:
         self.waiting.extend(requests)
@@ -84,11 +127,68 @@ class ContinuousScheduler:
         (no pages free yet — admission stays FIFO, no overtaking)."""
         self.waiting.insert(0, request)
 
+    # ---- step planning -------------------------------------------------------
+
+    def plan_step(self) -> list[StepItem]:
+        """Plan one ragged mixed step under the token budget.
+
+        Decode rows come first (one token each — they are latency-critical
+        and cheap); the leftover budget is dealt to prefilling slots
+        round-robin in chunks of up to ``prefill_chunk`` tokens. When decode
+        rows alone exhaust the budget, prefill simply waits — decode slots
+        retire in bounded time (``new_limit``) and hand their budget back,
+        so prefill progress is delayed, never deadlocked. If *only* prefill
+        slots are active the full budget is theirs.
+        """
+        decode_rows: list[int] = []
+        prefill_rows: list[int] = []
+        for i, st in enumerate(self.slots):
+            if st is None or st.done:
+                continue
+            (prefill_rows if st.prefilling else decode_rows).append(i)
+        items = [StepItem(i, 1, False) for i in decode_rows]
+        left = self.token_budget - len(items)
+        if not prefill_rows or left <= 0:
+            return items
+        # Rotate so successive steps serve prefilling slots fairly.
+        order = sorted(prefill_rows, key=lambda i: (i - self._rr) % self.n_slots)
+        for slot in order:
+            if left <= 0:
+                break
+            st = self.slots[slot]
+            n = min(self.prefill_chunk, len(st.prompt) - st.prompt_pos, left)
+            items.append(
+                StepItem(
+                    slot,
+                    n,
+                    True,
+                    finishes_prompt=st.prompt_pos + n >= len(st.prompt),
+                )
+            )
+            left -= n
+            self._rr = (slot + 1) % self.n_slots
+        return items
+
     # ---- lifecycle -----------------------------------------------------------
 
-    def place(self, slot: int, request, *, eos_id: int, new_limit: int) -> Slot:
+    def place(
+        self,
+        slot: int,
+        request,
+        *,
+        eos_id: int,
+        new_limit: int,
+        prompt: Optional[np.ndarray] = None,
+        prompt_pos: int = 0,
+    ) -> Slot:
         assert self.slots[slot] is None, f"slot {slot} occupied"
-        st = Slot(request=request, eos_id=eos_id, new_limit=new_limit)
+        st = Slot(
+            request=request,
+            eos_id=eos_id,
+            new_limit=new_limit,
+            prompt=None if prompt is None else np.asarray(prompt, np.int32),
+            prompt_pos=prompt_pos,
+        )
         self.slots[slot] = st
         return st
 

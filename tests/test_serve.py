@@ -185,19 +185,82 @@ def test_page_pool_alloc_free_reserve():
 def test_paged_kv_pool_lifecycle(deepseek_lm):
     lm, _ = deepseek_lm
     cfg = lm.cfg.with_(kv_layout="paged", page_size=16)
-    lmp = build_model(cfg)
-    params = lmp.init(jax.random.PRNGKey(0))
     pool = PagedKVPool(cfg, cfg.n_layers, n_slots=2, max_len=64)
     assert pool.alloc.free_count == 2 * 4  # 4 pages per slot, dummy excluded
     assert pool.can_admit(16, 8)
 
-    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab)
-    _, caches = jax.jit(lambda p, b: lmp.prefill(p, b, 16))(params, {"tokens": toks})
-    pool.insert(0, caches, prompt_len=16, max_new=8)
-    assert pool.lens[0] == 16 and pool.block_tables[0, 0] != 0
-    assert pool.alloc.reserved == 1  # 16+8 tokens -> 2 pages worst, 1 held
-    pool.ensure_writable(0)  # len 16 == 1 page * 16 -> grows by one page
+    prompt = np.arange(2, 18, dtype=np.int32)  # 16 tokens = 1 full page
+    shared = pool.admit(0, prompt, max_new=8)
+    assert shared == 0  # empty registry: nothing to adopt
+    assert pool.lens[0] == 0 and not pool.block_tables[0].any()
+    assert pool.alloc.reserved == 2  # 16+8 tokens -> 2 pages worst, all lazy
+    pool.ensure_writable(0, 16)  # the prefill chunk materializes page 0
+    assert pool.block_tables[0, 0] != 0 and pool.alloc.reserved == 1
+    pool.advance(0, 16)
+    pool.register_prompt(0, prompt)
+    pool.ensure_writable(0)  # first decode write crosses into page 1
     assert pool.alloc.reserved == 0 and pool.block_tables[0, 1] != 0
+    pool.check_invariants()
     pool.release(0)
     assert pool.alloc.free_count == 8 and pool.alloc.reserved == 0
     assert pool.lens[0] == 0 and not pool.block_tables[0].any()
+    pool.check_invariants()
+
+
+def test_paged_kv_pool_prefix_sharing_and_cow(deepseek_lm):
+    """A second admission with a matching prompt adopts the donor's frozen
+    pages (no allocation), and copy-on-write forks the partially covered
+    tail page on its first write."""
+    lm, _ = deepseek_lm
+    cfg = lm.cfg.with_(kv_layout="paged", page_size=8)
+    pool = PagedKVPool(cfg, cfg.n_layers, n_slots=3, max_len=64)  # 8 pages/slot
+    prompt = np.arange(2, 26, dtype=np.int32)  # 24 tokens: 3 full pages
+
+    assert pool.admit(0, prompt, max_new=4) == 0
+    pool.ensure_writable(0, 24)
+    pool.advance(0, 24)
+    pool.register_prompt(0, prompt)
+    donor_pages = list(pool._slot_pages[0])
+
+    # Same prompt: full-page match capped at len-1=23 -> pages 0,1 full +
+    # page 2 partially (7 of 8 tokens).
+    shared = pool.admit(1, prompt, max_new=4)
+    assert shared == 23
+    assert pool.shared_hits == 3
+    assert pool._slot_pages[1] == donor_pages  # adopted, not copied
+    assert pool.lens[1] == 23
+    pool.check_invariants()
+
+    # The adopter's first write (prompt token 23 at position 23) lands in
+    # shared page 2 -> CoW fork; donor's page is untouched.
+    free_before = pool.alloc.free_count
+    pool.ensure_writable(1, 1)
+    assert pool.cow_forks == 1
+    assert pool._slot_pages[1][2] != donor_pages[2]
+    assert pool._slot_pages[1][:2] == donor_pages[:2]  # frozen pages still shared
+    assert pool.alloc.free_count == free_before - 1
+    assert pool._ref[donor_pages[2]] == 1 and pool._ref[donor_pages[0]] == 2
+    pool.check_invariants()
+
+    # Releasing the donor keeps the shared pages alive for the adopter.
+    pool.release(0)
+    assert pool._ref[donor_pages[0]] == 1
+    pool.check_invariants()
+    pool.release(1)
+    assert pool.alloc.free_count == pool.alloc.n_pages - 1
+    pool.check_invariants()
+
+
+def test_paged_kv_pool_prefix_divergent_prompt_no_match(deepseek_lm):
+    lm, _ = deepseek_lm
+    cfg = lm.cfg.with_(kv_layout="paged", page_size=8)
+    pool = PagedKVPool(cfg, cfg.n_layers, n_slots=2, max_len=64)
+    prompt = np.arange(2, 26, dtype=np.int32)
+    pool.admit(0, prompt, max_new=4)
+    pool.ensure_writable(0, 24)
+    pool.advance(0, 24)
+    pool.register_prompt(0, prompt)
+    other = prompt.copy()
+    other[1] = 99  # diverges inside the first page
+    assert pool.admit(1, other, max_new=4) == 0
+    pool.check_invariants()
