@@ -1,0 +1,163 @@
+"""CI schema check for the obs telemetry sinks.
+
+  PYTHONPATH=src python benchmarks/check_metrics.py metrics.jsonl trace.json
+
+Fails (exit 1, naming every violation) when the serve-smoke telemetry dump
+is missing required series or the trace file breaks the Chrome-trace event
+schema — the structured companion to BENCH_serve.json: a refactor that
+silently stops emitting TTFT histograms or the modeled-LLC gauges turns the
+job red instead of rotting the dashboard.
+
+Checks:
+
+* metrics.jsonl — every line parses, carries ``schema_version`` (matching
+  ``repro.obs.export.SCHEMA_VERSION``) and a kind/name/labels triple;
+  required series exist: TTFT/TPOT histograms, per-kind token counters
+  (decode AND prefill), pool occupancy + prefix-sharing gauges/counters,
+  and ``llc.modeled_miss_bytes`` gauges for >= 2 distinct traversal orders;
+  histogram lines carry consistent buckets (cumulative, ending at +Inf,
+  count == last cumulative).
+* trace.json — valid JSON with a non-empty ``traceEvents`` list; every
+  event has name/ph/ts/pid/tid; complete events (``ph="X"``) carry a
+  non-negative ``dur``; timestamps are finite numbers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REQUIRED_HISTOGRAMS = ("serve.ttft_s", "serve.tpot_s", "serve.step_time_s")
+REQUIRED_COUNTER_SERIES = (
+    ("serve.step.tokens", {"kind": "decode"}),
+    ("serve.step.tokens", {"kind": "prefill"}),
+    ("serve.tokens.generated", {}),
+    ("serve.steps", {"width": "wide"}),
+    ("serve.steps", {"width": "narrow"}),
+    ("pool.pages_adopted", {}),
+    ("pool.cow_forks", {}),
+)
+REQUIRED_GAUGES = (
+    "pool.occupancy_frac",
+    "pool.pages_free",
+    "pool.shared_pages",
+    "serve.queue_depth",
+    "serve.budget_utilization",
+    "llc.footprint_bytes",
+)
+MIN_LLC_ORDERS = 2
+
+
+def check_metrics(path: str, errors: list) -> None:
+    try:
+        with open(path) as f:
+            lines = [json.loads(ln) for ln in f if ln.strip()]
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"{path}: unreadable/unparseable: {e}")
+        return
+    if not lines:
+        errors.append(f"{path}: empty metrics dump")
+        return
+
+    by_kind = {"counter": {}, "gauge": {}, "histogram": {}}
+    for i, rec in enumerate(lines):
+        for field in ("schema_version", "kind", "name", "labels"):
+            if field not in rec:
+                errors.append(f"{path}:{i + 1}: missing {field!r}")
+        kind = rec.get("kind")
+        if kind not in by_kind:
+            errors.append(f"{path}:{i + 1}: unknown kind {kind!r}")
+            continue
+        by_kind[kind][(rec["name"], tuple(sorted(rec["labels"].items())))] = rec
+
+    def has(kind, name, labels):
+        return (name, tuple(sorted(labels.items()))) in by_kind[kind]
+
+    for name in REQUIRED_HISTOGRAMS:
+        if not has("histogram", name, {}):
+            errors.append(f"{path}: missing histogram {name}")
+    for name, labels in REQUIRED_COUNTER_SERIES:
+        if not has("counter", name, labels):
+            errors.append(f"{path}: missing counter {name} {labels}")
+    for name in REQUIRED_GAUGES:
+        if not has("gauge", name, {}):
+            errors.append(f"{path}: missing gauge {name}")
+
+    llc_orders = {
+        labels_dict.get("order")
+        for (name, labels), rec in by_kind["gauge"].items()
+        if name == "llc.modeled_miss_bytes"
+        for labels_dict in (dict(labels),)
+    }
+    llc_orders.discard(None)
+    if len(llc_orders) < MIN_LLC_ORDERS:
+        errors.append(
+            f"{path}: llc.modeled_miss_bytes gauges cover {sorted(llc_orders)} "
+            f"— need >= {MIN_LLC_ORDERS} traversal orders"
+        )
+
+    for (name, labels), rec in by_kind["histogram"].items():
+        buckets = rec.get("buckets", [])
+        if not buckets or buckets[-1][0] != "+Inf":
+            errors.append(f"{path}: histogram {name}: buckets must end at +Inf")
+            continue
+        cums = [c for _, c in buckets]
+        if cums != sorted(cums):
+            errors.append(f"{path}: histogram {name}: non-cumulative buckets")
+        if rec.get("count") != cums[-1]:
+            errors.append(
+                f"{path}: histogram {name}: count {rec.get('count')} != "
+                f"last cumulative bucket {cums[-1]}"
+            )
+
+
+def check_trace(path: str, errors: list) -> None:
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"{path}: unreadable/unparseable: {e}")
+        return
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        errors.append(f"{path}: traceEvents missing or empty")
+        return
+    names = set()
+    for i, ev in enumerate(events):
+        for field in ("name", "ph", "ts", "pid", "tid"):
+            if field not in ev:
+                errors.append(f"{path}: event {i}: missing {field!r}")
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            errors.append(f"{path}: event {i}: non-numeric ts {ts!r}")
+        if ev.get("ph") == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{path}: event {i}: X-event bad dur {dur!r}")
+        names.add(ev.get("name"))
+    for required in ("serve.step", "serve.plan_step", "serve.device_step"):
+        if required not in names:
+            errors.append(f"{path}: no {required!r} spans recorded")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("metrics", help="metrics JSONL from --metrics-out")
+    ap.add_argument("trace", help="Chrome-trace JSON from --trace-out")
+    args = ap.parse_args()
+
+    errors: list[str] = []
+    check_metrics(args.metrics, errors)
+    check_trace(args.trace, errors)
+    if errors:
+        print(f"check_metrics: {len(errors)} violation(s):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"check_metrics: OK ({args.metrics}, {args.trace})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -141,6 +141,22 @@ EXPERIMENTS = {
 }
 
 OUT = "artifacts/hillclimb"
+AUTOTUNE_CACHE = os.path.join(OUT, "autotune_cache.jsonl")
+
+
+def record_winner(kind: str, key: dict, winner: dict) -> None:
+    """Append a sweep winner to the persistent autotune cache.
+
+    One JSONL line per winner through the shared ``repro.obs.export`` sink
+    (``schema_version`` stamped), keyed by (arch, seq bucket, capacity,
+    backend) — the lookup key an engine-start autotune consultation needs
+    (ROADMAP item 4). Append-only: later entries with the same key win.
+    """
+    from repro.obs.export import append_jsonl
+
+    rec = append_jsonl(AUTOTUNE_CACHE, {"key": key, "winner": winner}, kind=kind)
+    print(f"[autotune-cache] {kind} {key} -> {AUTOTUNE_CACHE} "
+          f"(schema_version={rec['schema_version']})")
 
 
 def _apply_cfg_overrides(arch, ov):
@@ -239,6 +255,14 @@ def autotune_bwd(arch: str, *, seq: int, batch: int, impl: str, reps: int,
         f"[autotune-bwd {arch}] best bwd_q_block={best['bwd_q_block']} "
         f"bwd_kv_block={best['bwd_kv_block']} step_s={best['step_s']:.4f} "
         f"({rec['speedup_vs_fwd_blocks']:.3f}x vs fwd-block default) -> {path}"
+    )
+    record_winner(
+        "bwd_autotune",
+        key={"arch": arch, "seq_bucket": seq, "impl": impl,
+             "backend": rec["backend"]},
+        winner={"bwd_q_block": best["bwd_q_block"],
+                "bwd_kv_block": best["bwd_kv_block"],
+                "step_s": best["step_s"]},
     )
     return rec
 
@@ -372,6 +396,13 @@ def sweep_orders(arch: str, *, seq: int, batch: int, impl: str, reps: int,
         f"[sweep-orders {arch}] winner: {winner['order']}{wg} "
         f"blocks=({winner['q_block']},{winner['kv_block']}) "
         f"modeled miss {winner['total_noncomp_miss_bytes']/2**20:.2f} MiB -> {path}"
+    )
+    record_winner(
+        "order_sweep",
+        key={"arch": arch, "seq_bucket": seq, "capacity_mib": capacity_mib,
+             "n_workers": n_workers, "backend": rec["backend"]},
+        winner=dict(rec["winner"],
+                    modeled_miss_bytes=winner["total_noncomp_miss_bytes"]),
     )
     return rec
 

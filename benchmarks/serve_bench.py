@@ -114,8 +114,24 @@ def _pct(xs, p):
     return xs[i]
 
 
+def _work_counters(reg) -> dict:
+    """Deterministic work counters, read from the engine's obs registry
+    (the hand-rolled engine-side tallies are gone — the registry is the
+    single source: ``serve.steps{width=...}`` + the ``pool.*`` counters)."""
+    v = reg.value
+    wide = v("serve.steps", width="wide")
+    return {
+        "mixed_steps": wide + v("serve.steps", width="narrow"),
+        "wide_steps": wide,
+        "pages_adopted": v("pool.pages_adopted"),
+        "prompt_tokens_adopted": v("pool.tokens_adopted"),
+        "cow_forks": v("pool.cow_forks"),
+    }
+
+
 def time_engine(eng, make_requests, repeats: int = 5) -> dict:
     eng.generate(make_requests())  # warm-up: compile both step widths
+    base = _work_counters(eng.obs)  # registry counters are cumulative
     best, results = None, None
     ttfts, tpots = [], []
     for _ in range(repeats):  # best-of-N: the streams are short, CI CPUs noisy
@@ -130,7 +146,7 @@ def time_engine(eng, make_requests, repeats: int = 5) -> dict:
         ttfts += [r.ttft_s for r in res]
         tpots += [r.tpot_s for r in res if r.steps > 1]
     tokens = sum(r.steps for r in results)
-    return {
+    out = {
         "requests": len(results),
         "tokens": tokens,
         "seconds": round(best, 4),
@@ -140,6 +156,16 @@ def time_engine(eng, make_requests, repeats: int = 5) -> dict:
         "tpot_p50_s": round(_pct(tpots, 50), 4),
         "tpot_p95_s": round(_pct(tpots, 95), 4),
     }
+    # Per-stream work counters = registry delta over the deterministic
+    # repeats (identical streams, so the division is exact). Static
+    # engines run no mixed steps — the keys stay continuous-only.
+    work = {
+        k: int(round((after - base[k]) / repeats))
+        for k, after in _work_counters(eng.obs).items()
+    }
+    if work["mixed_steps"]:
+        out.update(work)
+    return out
 
 
 def main() -> None:
@@ -210,12 +236,10 @@ def main() -> None:
     )
     eng_shared = engine("continuous", prefill_chunk=args.prefill_chunk)
     shared = time_engine(eng_shared, make_shared)
-    shared.update(eng_shared.last_stats)
     eng_unshared = engine(
         "continuous", prefill_chunk=args.prefill_chunk, prefix_sharing=False
     )
     unshared = time_engine(eng_unshared, make_shared)
-    unshared.update(eng_unshared.last_stats)
     report["shared_prefix"] = {
         "n_requests": n_req,
         "prefix_len": prefix_len,

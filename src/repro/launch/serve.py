@@ -7,6 +7,14 @@ requests through the ServeEngine.
 ``--scheduler continuous`` serves over the paged KV pool with continuous
 batching (token-only full-attention archs); ``auto`` picks it when the
 arch supports it and falls back to the static-group path otherwise.
+
+Telemetry (``repro.obs``): ``--metrics-out metrics.jsonl`` dumps the
+engine's registry (TTFT/TPOT histograms, per-kind token counters, pool and
+scheduler gauges, ``llc.modeled_miss_bytes{order=...}``) one JSON line per
+series, and ``--trace-out trace.json`` writes the step spans as
+Chrome-trace JSON — open it in ``chrome://tracing`` or Perfetto. The
+``llc.*`` gauges sample every ``--llc-every`` mixed steps (0 disables);
+``--log-every`` prints a periodic one-line stats summary mid-stream.
 """
 
 from __future__ import annotations
@@ -63,6 +71,18 @@ def main():
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the paged pool's content-hash prefix "
                          "sharing / copy-on-write page dedup")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the obs metrics registry as JSONL here")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the span trace as Chrome-trace JSON here")
+    ap.add_argument("--llc-every", type=int, default=8,
+                    help="sample modeled-LLC gauges every N mixed steps "
+                         "(continuous path; 0 disables)")
+    ap.add_argument("--llc-capacity-mib", type=float, default=None,
+                    help="modeled LLC capacity for the llc.* gauges (MiB; "
+                         "default matches hillclimb --sweep-orders)")
+    ap.add_argument("--log-every", type=int, default=0, metavar="STEPS",
+                    help="print a one-line stats summary every N mixed steps")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -86,6 +106,11 @@ def main():
         token_budget=args.token_budget,
         prefill_chunk=args.prefill_chunk,
         prefix_sharing=not args.no_prefix_sharing,
+        llc_every=args.llc_every,
+        llc_capacity_bytes=(
+            args.llc_capacity_mib * 2**20 if args.llc_capacity_mib else None
+        ),
+        log_every_steps=args.log_every,
     )
     rng = np.random.default_rng(0)
     reqs = [
@@ -102,16 +127,30 @@ def main():
     dt = time.time() - t0
     tok = sum(r.steps for r in results)
     print(f"served {len(results)} requests, {tok} tokens in {dt:.2f}s ({tok/dt:.1f} tok/s)")
-    stats = getattr(eng, "last_stats", None)
-    if stats:
+    stats = eng.last_stats
+    if stats is not None:
         print(
-            f"  {stats['mixed_steps']} mixed steps ({stats['wide_steps']} wide), "
-            f"{stats['pages_adopted']} prefix pages adopted "
-            f"({stats['prompt_tokens_adopted']} tokens), "
-            f"{stats['cow_forks']} CoW forks"
+            f"  {stats.mixed_steps} mixed steps ({stats.wide_steps} wide), "
+            f"{stats.pages_adopted} prefix pages adopted "
+            f"({stats.prompt_tokens_adopted} tokens), "
+            f"{stats.cow_forks} CoW forks"
         )
     for r in results[:4]:
         print(f"  rid={r.rid} -> {r.tokens.tolist()}")
+
+    if args.metrics_out:
+        from repro.obs import write_metrics_jsonl
+
+        n = write_metrics_jsonl(
+            eng.obs, args.metrics_out, extra={"arch": args.arch}
+        )
+        print(f"wrote {n} metric series -> {args.metrics_out}")
+    if args.trace_out:
+        eng.tracer.write(args.trace_out)
+        print(
+            f"wrote {len(eng.tracer.events())} trace events -> {args.trace_out} "
+            "(open in chrome://tracing or ui.perfetto.dev)"
+        )
 
 
 if __name__ == "__main__":

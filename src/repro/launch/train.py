@@ -69,6 +69,11 @@ def main():
                     help="fused-backward kv tile (default: kv_block)")
     ap.add_argument("--crash-at", type=int, default=None, help="inject failure (FT demo)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the obs metrics registry as JSONL here "
+                         "(step time/throughput/loss/grad-norm series)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write step/checkpoint spans as Chrome-trace JSON")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
@@ -114,6 +119,16 @@ def main():
         f"last_loss={res.losses[-1] if res.losses else None} "
         f"interrupted={res.interrupted}"
     )
+    if args.metrics_out and res.registry is not None:
+        from repro.obs import write_metrics_jsonl
+
+        n = write_metrics_jsonl(
+            res.registry, args.metrics_out, extra={"arch": args.arch}
+        )
+        print(f"wrote {n} metric series -> {args.metrics_out}")
+    if args.trace_out and res.tracer is not None:
+        res.tracer.write(args.trace_out)
+        print(f"wrote {len(res.tracer.events())} trace events -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,182 @@
+"""Periodic modeled-LLC sampler: the paper's cache analysis, live.
+
+The offline benches evaluate ``kernels.traffic.fwd_llc_model`` /
+``shared_prefix_llc_model`` at hand-picked footprints; this sampler
+evaluates them against the *live* ``serve.kv_pool.PagedKVPool`` state every
+``every`` mixed steps and emits the results as registry gauges:
+
+* ``llc.modeled_miss_bytes{order=...,model=fwd}`` — the forward-wavefront
+  LRU model at the pool's current longest-row footprint, one gauge per
+  candidate traversal order (the engine's current order always included);
+* ``llc.modeled_miss_bytes{order=...,model=shared_prefix}`` — the
+  cross-row shared-prefix decode model at the live row count / shared-page
+  count (emitted only when the pool actually holds shared pages);
+* ``llc.footprint_bytes`` / ``llc.capacity_bytes`` / ``llc.active_rows`` /
+  ``llc.shared_pages`` — the inputs, so a dashboard can plot modeled misses
+  against the footprint that produced them;
+* ``llc.best_order_index`` — argmin over the fwd gauges (index into
+  :attr:`LLCSampler.orders`), i.e. *the* decision signal ROADMAP item 4's
+  online order adaptation will consume. This module lands it read-only:
+  nothing here switches the order, it only makes the switch observable.
+
+The model replay is host-side Python over O(tiles²) wavefront steps — at
+serve page granularity that is thousands of dict operations, so sampling
+every step would be felt; ``every`` defaults to 8 and ``every<=0`` disables
+the sampler entirely (the zero-overhead default for benches).
+
+``fwd_spec_for`` is deliberately public and deterministic: tests (and
+dashboards) re-derive the exact ``FlashGridSpec`` the sampler used at a
+given footprint and check gauge parity against a direct ``fwd_llc_model``
+call.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.kernels.traffic import (
+    FlashGridSpec,
+    fwd_llc_model,
+    shared_prefix_llc_model,
+)
+from repro.obs.metrics import Registry
+
+__all__ = ["LLCSampler", "DEFAULT_CAPACITY_BYTES"]
+
+# Default modeled LLC capacity: 3 MiB, matching the fixed-hardware view the
+# hillclimb --sweep-orders ranking uses (so live gauges and offline sweep
+# winners are comparable on the same axis).
+DEFAULT_CAPACITY_BYTES = 3 * 2**20
+
+
+class LLCSampler:
+    """Evaluate the traffic LLC models against live pool state, per epoch."""
+
+    def __init__(
+        self,
+        registry: Registry,
+        *,
+        page: int,
+        n_heads: int,
+        n_kv_heads: int,
+        head_dim: int,
+        elem_bytes: int,
+        current_order: str,
+        snake_group: Optional[int] = None,
+        orders: Sequence[str] = ("cyclic", "sawtooth"),
+        every: int = 8,
+        n_workers: int = 8,
+        capacity_bytes: float = DEFAULT_CAPACITY_BYTES,
+    ):
+        self.registry = registry
+        self.page = page
+        self.n_groups = max(1, n_heads // max(n_kv_heads, 1))
+        self.n_kv_heads = n_kv_heads
+        self.head_dim = head_dim
+        self.elem_bytes = elem_bytes
+        self.current_order = str(current_order)
+        self.snake_group = snake_group
+        # Current order first (it is the one actually running), then the
+        # alternates — ≥2 orders total so modeled-vs-live dashboards always
+        # have a comparison series.
+        self.orders = [self.current_order] + [
+            o for o in orders if o != self.current_order
+        ]
+        self.every = every
+        self.n_workers = n_workers
+        self.capacity_bytes = float(capacity_bytes)
+        self.samples = 0
+
+    # ---- deterministic model inputs (public: tests re-derive these) ----------
+
+    def fwd_spec_for(self, kv_tokens: int) -> FlashGridSpec:
+        """The forward-grid spec modeled at a ``kv_tokens``-token footprint:
+        a causal pass over the live KV at page-size tiles (page == kv tile by
+        construction of the paged pool, DESIGN.md §8)."""
+        kv_tokens = max(self.page, -(-kv_tokens // self.page) * self.page)
+        return FlashGridSpec(
+            seq_q=kv_tokens,
+            seq_kv=kv_tokens,
+            n_groups=self.n_groups,
+            head_dim=self.head_dim,
+            q_block=self.page,
+            kv_block=self.page,
+            elem_bytes=self.elem_bytes,
+            causal=True,
+        )
+
+    def pool_footprint(self, pool) -> dict:
+        """Live footprint summary: active rows, longest row (tokens),
+        distinct held pages, shared (refcount>1) pages, resident KV bytes."""
+        lens = [int(x) for x in pool.lens if int(x) > 0]
+        held = {pid for pages in pool._slot_pages for pid in pages}
+        shared = sum(1 for pid in held if pool._ref[pid] > 1)
+        page_bytes = self.page * self.n_kv_heads * self.head_dim * self.elem_bytes
+        return {
+            "active_rows": len(lens),
+            "max_len": max(lens, default=0),
+            "distinct_pages": len(held),
+            "shared_pages": shared,
+            "resident_bytes": 2 * len(held) * page_bytes,  # K + V
+        }
+
+    # ---- sampling ------------------------------------------------------------
+
+    def maybe_sample(self, step_epoch: int, pool) -> bool:
+        """Sample iff enabled and ``step_epoch`` lands on the period."""
+        if self.every <= 0 or step_epoch % self.every != 0:
+            return False
+        return self.sample(pool)
+
+    def sample(self, pool) -> bool:
+        fp = self.pool_footprint(pool)
+        if fp["max_len"] == 0:
+            return False
+        reg = self.registry
+        reg.gauge("llc.footprint_bytes").set(fp["resident_bytes"])
+        reg.gauge("llc.capacity_bytes").set(self.capacity_bytes)
+        reg.gauge("llc.active_rows").set(fp["active_rows"])
+        reg.gauge("llc.shared_pages").set(fp["shared_pages"])
+
+        spec = self.fwd_spec_for(fp["max_len"])
+        fwd_miss = []
+        for order in self.orders:
+            res = fwd_llc_model(
+                spec,
+                order,
+                snake_group=self.snake_group if order == "block_snake" else None,
+                n_workers=self.n_workers,
+                capacity_bytes=self.capacity_bytes,
+            )
+            fwd_miss.append(res.misses)
+            reg.gauge("llc.modeled_miss_bytes", order=order, model="fwd").set(
+                res.misses
+            )
+        reg.gauge("llc.best_order_index").set(fwd_miss.index(min(fwd_miss)))
+
+        if fp["shared_pages"] and fp["active_rows"] > 1:
+            prefix_pages = max(1, fp["shared_pages"])
+            own = max(self.page, fp["max_len"] - prefix_pages * self.page)
+            for order in self.orders:
+                res = shared_prefix_llc_model(
+                    order,
+                    n_rows=fp["active_rows"],
+                    prefix_pages=prefix_pages,
+                    own_tokens=own,
+                    n_steps=self.every,
+                    page=self.page,
+                    n_kv_heads=self.n_kv_heads,
+                    head_dim=self.head_dim,
+                    elem_bytes=self.elem_bytes,
+                    capacity_bytes=self.capacity_bytes,
+                    snake_group=(
+                        self.snake_group if order == "block_snake" else None
+                    ),
+                )
+                reg.gauge(
+                    "llc.modeled_miss_bytes", order=order, model="shared_prefix"
+                ).set(res.misses)
+
+        self.samples += 1
+        reg.counter("llc.samples").inc()
+        return True

@@ -3,6 +3,7 @@ from repro.serve.engine import (
     GenerationResult,
     Request,
     ServeEngine,
+    StepStats,
     supports_continuous,
 )
 from repro.serve.kv_pool import PagedKVPool, PagePool, assemble_cache_view
@@ -13,6 +14,7 @@ __all__ = [
     "GenerationResult",
     "Request",
     "ServeEngine",
+    "StepStats",
     "supports_continuous",
     "PagedKVPool",
     "PagePool",

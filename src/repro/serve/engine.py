@@ -40,7 +40,9 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import time
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -50,12 +52,15 @@ import numpy as np
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.dist import sharding as shd
 from repro.models.model import LM, build_model
+from repro.obs import LLCSampler, Registry, Tracer
+from repro.obs.llc import DEFAULT_CAPACITY_BYTES
 from repro.serve.kv_pool import PagedKVPool, assemble_cache_view
 from repro.serve.scheduler import ContinuousScheduler
 
 __all__ = [
     "Request",
     "GenerationResult",
+    "StepStats",
     "ServeEngine",
     "CONTINUOUS_FAMILIES",
     "supports_continuous",
@@ -93,7 +98,57 @@ class GenerationResult:
     tokens: np.ndarray            # generated tokens (without prompt)
     steps: int
     ttft_s: float = 0.0           # wall time, engine start -> first token
-    tpot_s: float = 0.0           # mean wall time per token after the first
+    tpot_s: float = 0.0           # mean wall time per token after the first;
+                                  # NaN when <= 1 token was generated (there
+                                  # is no "per token after the first" then)
+
+
+def _tpot(elapsed_after_first: float, n_tok: int) -> float:
+    """Mean time per output token after the first; NaN for n_tok <= 1 — a
+    single-token generation has no inter-token interval, and reporting
+    ``elapsed/1`` instead put a meaningless wall-clock sample into the TPOT
+    percentiles. Histograms drop NaN observations by construction."""
+    return (elapsed_after_first / (n_tok - 1)) if n_tok > 1 else math.nan
+
+
+@dataclasses.dataclass
+class StepStats:
+    """Deterministic per-stream work counters for the continuous path.
+
+    Typed replacement for the old ``ServeEngine.last_stats`` ad-hoc dict;
+    every field is also published as a registry counter (``serve.steps``,
+    ``pool.pages_adopted``, ...). The mapping shim below keeps
+    ``stats["wide_steps"]``-style callers working (with a
+    DeprecationWarning) — prefer attribute access or the registry.
+    """
+
+    mixed_steps: int = 0          # ragged mixed steps dispatched
+    wide_steps: int = 0           # steps at chunk width (any prefill row)
+    pages_adopted: int = 0        # prefix pages adopted instead of computed
+    prompt_tokens_adopted: int = 0
+    cow_forks: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    # -- deprecation shim: dict-style access used by pre-obs benches/tests --
+    def keys(self):
+        return self.as_dict().keys()
+
+    def __iter__(self):
+        return iter(self.as_dict())
+
+    def __getitem__(self, key: str):
+        warnings.warn(
+            "ServeEngine.last_stats is a StepStats dataclass now; use "
+            f"attribute access (.{key}) or the engine's obs registry",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.as_dict()[key]
+
+    def get(self, key: str, default=None):
+        return self.as_dict().get(key, default)
 
 
 @jax.jit
@@ -131,6 +186,11 @@ class ServeEngine:
         token_budget: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
         prefix_sharing: bool = True,
+        registry: Optional[Registry] = None,
+        tracer: Optional[Tracer] = None,
+        llc_every: int = 0,
+        llc_capacity_bytes: Optional[float] = None,
+        log_every_steps: int = 0,
     ):
         """Pass ``mesh`` (+ optional ParallelConfig) for sharded serving:
         params are placed on their TP/FSDP shardings and every step runs
@@ -143,7 +203,19 @@ class ServeEngine:
         decode rows and ``prefill_chunk``-token prompt chunks (default: 4
         pages). ``prefix_sharing=False`` disables the pool's content-hash
         page dedup (for A/B measurement). ``"static"`` keeps the
-        fixed-group path."""
+        fixed-group path.
+
+        Telemetry (``repro.obs``, DESIGN.md §10): the engine records step
+        spans into ``tracer`` and metrics (TTFT/TPOT histograms, per-kind
+        token counters, pool/scheduler gauges) into ``registry`` — both
+        default to fresh per-engine instances, exposed as ``.obs`` /
+        ``.tracer``. Recording is in-process and sink-free; pass the
+        instances to ``repro.obs.export`` to dump them. ``llc_every > 0``
+        additionally samples the modeled-LLC gauges
+        (``llc.modeled_miss_bytes{order=...}``) every that many mixed steps
+        against the live pool footprint (continuous path only);
+        ``log_every_steps > 0`` prints a one-line stats summary at that
+        step cadence."""
         if scheduler not in ("static", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if scheduler == "continuous":
@@ -196,6 +268,48 @@ class ServeEngine:
         self._decode = jax.jit(lm.decode_step)
         self._mixed_step = None       # single jitted ragged step (continuous)
         self._step_widths: set[int] = set()
+
+        # ---- telemetry (repro.obs) ----
+        self.obs = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else Tracer()
+        self._log_every = log_every_steps
+        self.last_stats: Optional[StepStats] = None
+        r = self.obs  # hot-loop handles resolved once (recording = attr add)
+        self._m_tok_decode = r.counter("serve.step.tokens", kind="decode")
+        self._m_tok_prefill = r.counter("serve.step.tokens", kind="prefill")
+        self._m_generated = r.counter("serve.tokens.generated")
+        self._m_steps_wide = r.counter("serve.steps", width="wide")
+        self._m_steps_narrow = r.counter("serve.steps", width="narrow")
+        self._m_req_admitted = r.counter("serve.requests", event="admitted")
+        self._m_req_finished = r.counter("serve.requests", event="finished")
+        self._m_req_requeued = r.counter("serve.requests", event="requeued")
+        self._m_compiles = r.counter("serve.compiles")
+        self._m_ttft = r.histogram("serve.ttft_s")
+        self._m_tpot = r.histogram("serve.tpot_s")
+        self._m_step_time = r.histogram("serve.step_time_s")
+        self._m_queue = r.gauge("serve.queue_depth")
+        self._m_active = r.gauge("serve.active_slots")
+        self._m_budget = r.gauge("serve.budget_utilization")
+        self.llc: Optional[LLCSampler] = None
+        if scheduler == "continuous":
+            cfg = self.lm.cfg
+            elem_bytes = (
+                1
+                if cfg.kv_cache_dtype == "int8"
+                else np.dtype(cfg.activation_dtype()).itemsize
+            )
+            self.llc = LLCSampler(
+                self.obs,
+                page=self._page,
+                n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.hd,
+                elem_bytes=elem_bytes,
+                current_order=cfg.attn_order,
+                snake_group=cfg.snake_group,
+                every=llc_every,
+                capacity_bytes=llc_capacity_bytes or DEFAULT_CAPACITY_BYTES,
+            )
 
     def _mesh_ctx(self):
         return (
@@ -279,8 +393,10 @@ class ServeEngine:
             batch = {"tokens": tokens}
 
         t0 = time.perf_counter() if t0 is None else t0
-        with self._mesh_ctx():
-            logits, caches = self._prefill(self.params, batch)
+        with self.tracer.span("serve.prefill", rows=len(group), bucket=bucket):
+            with self._mesh_ctx():
+                logits, caches = self._prefill(self.params, batch)
+        self._m_tok_prefill.inc(len(group) * bucket)
         generated = np.zeros((len(group), max_new), np.int32)
         done = np.asarray([lim == 0 for lim in new_limits])  # 0-limit rows emit nothing
         steps = np.zeros(len(group), np.int32)
@@ -309,21 +425,34 @@ class ServeEngine:
                         done[j] = True
             if done.all():
                 break
-            with self._mesh_ctx():
-                logits, caches = self._decode(self.params, cur, caches)
-            cur = self._sample(logits[:, -1], temps, seeds, t + 1)
+            with self.tracer.span("serve.decode_step", t=t):
+                with self._mesh_ctx():
+                    logits, caches = self._decode(self.params, cur, caches)
+                cur = self._sample(logits[:, -1], temps, seeds, t + 1)
+            self._m_tok_decode.inc(int((~done).sum()))
         total = time.perf_counter() - t0
 
-        return [
+        results = [
             GenerationResult(
                 rid=r.rid,
                 tokens=generated[j, : steps[j]],
                 steps=int(steps[j]),
                 ttft_s=ttft,
-                tpot_s=(total - ttft) / max(int(steps[j]) - 1, 1),
+                tpot_s=_tpot(total - ttft, int(steps[j])),
             )
             for j, r in enumerate(group)
         ]
+        for res in results:
+            self._record_result(res)
+        return results
+
+    def _record_result(self, res: GenerationResult) -> None:
+        """Publish one finished request into the registry (NaN TPOT — a
+        single-token generation — is dropped by the histogram)."""
+        self._m_req_finished.inc()
+        self._m_generated.inc(res.steps)
+        self._m_ttft.observe(res.ttft_s)
+        self._m_tpot.observe(res.tpot_s)
 
     def _sample(self, logits: jax.Array, temps, seeds, count: int) -> jnp.ndarray:
         counts = jnp.full(seeds.shape, count, jnp.int32)
@@ -388,7 +517,12 @@ class ServeEngine:
         sched.submit(list(requests))
         idx_of = {id(r): i for i, r in enumerate(requests)}  # default seeds
         pool = PagedKVPool(
-            cfg, cfg.n_layers, n_slots, cap, prefix_sharing=self.prefix_sharing
+            cfg,
+            cfg.n_layers,
+            n_slots,
+            cap,
+            prefix_sharing=self.prefix_sharing,
+            registry=self.obs,
         )
         self.last_pool = pool  # exposed for benches/tests (sharing counters)
 
@@ -409,98 +543,150 @@ class ServeEngine:
             now = time.perf_counter()
             n_tok = len(st.generated)
             ttft = first_t.pop(id(r), now) - t0
-            results[id(r)] = GenerationResult(
+            res = GenerationResult(
                 rid=r.rid,
                 tokens=np.asarray(st.generated, np.int32),
                 steps=n_tok,
                 ttft_s=ttft,
-                tpot_s=((now - t0) - ttft) / max(n_tok - 1, 1),
+                tpot_s=_tpot((now - t0) - ttft, n_tok),
             )
+            results[id(r)] = res
+            self._record_result(res)
 
+        tr = self.tracer
         step_fn = self._mixed_step_fn()
         step = 0
         n_steps = n_wide = 0  # deterministic per-stream work counters
+        last_cc = self.compiled_step_count()
         while sched.has_work():
-            # Admission: fill free slots with arrived requests while the
-            # pool can reserve their (sharing-reduced) worst case.
-            while (slot := sched.free_slot()) is not None:
-                req = sched.pop_admissible(step)
-                if req is None:
-                    break
-                if not self._admit(req, slot, sched, pool, temps, seeds, counts,
-                                   idx_of[id(req)]):
-                    sched.requeue(req)  # no pages yet; retry after retirements
-                    break
-                if sched.slots[slot].done:  # zero-limit request: emits nothing
-                    finish(slot)
+            t_iter = time.perf_counter()
+            with tr.span("serve.step", step=step):
+                # Admission: fill free slots with arrived requests while the
+                # pool can reserve their (sharing-reduced) worst case.
+                while (slot := sched.free_slot()) is not None:
+                    req = sched.pop_admissible(step)
+                    if req is None:
+                        break
+                    if not self._admit(req, slot, sched, pool, temps, seeds,
+                                       counts, idx_of[id(req)]):
+                        sched.requeue(req)  # no pages yet; retry after retirements
+                        self._m_req_requeued.inc()
+                        break
+                    self._m_req_admitted.inc()
+                    if sched.slots[slot].done:  # zero-limit request: emits nothing
+                        finish(slot)
 
-            plan = sched.plan_step()
-            if not plan:
-                if sched.waiting:
-                    nxt = sched.next_arrival()
-                    step = max(step + 1, nxt if nxt is not None else step + 1)
-                    continue
-                break
-
-            width = 1 if all(it.q_len == 1 for it in plan) else self._chunk
-            self._step_widths.add(width)
-            tokens = np.full((n_slots, width), self.eos, np.int32)
-            qlens = np.zeros((n_slots,), np.int32)
-            for it in plan:
-                st = sched.slots[it.slot]
-                if it.is_prefill:
-                    seg = st.prompt[st.prompt_pos : st.prompt_pos + it.q_len]
-                    tokens[it.slot, : len(seg)] = seg
-                else:
-                    tokens[it.slot, 0] = cur[it.slot]
-                qlens[it.slot] = it.q_len
-                pool.ensure_writable(it.slot, it.q_len)  # grow + CoW forks
-
-            with self._mesh_ctx():
-                toks_dev, pages = step_fn(
-                    self.params,
-                    jnp.asarray(tokens),
-                    pool.pages,
-                    pool.block_tables,
-                    pool.lens,
-                    qlens,
-                    temps,
-                    seeds,
-                    counts,
-                )
-            pool.update_pages(pages)
-            toks = np.asarray(toks_dev)
-            step += 1
-            n_steps += 1
-            n_wide += width > 1
-            for it in plan:
-                st = sched.slots[it.slot]
-                pool.advance(it.slot, it.q_len)
-                if it.is_prefill:
-                    st.prompt_pos += it.q_len
-                    if not it.finishes_prompt:
+                with tr.span("serve.plan_step"):
+                    plan = sched.plan_step()
+                self._m_queue.set(len(sched.waiting))
+                self._m_active.set(len(sched.active_slots()))
+                if not plan:
+                    if sched.waiting:
+                        nxt = sched.next_arrival()
+                        step = max(step + 1, nxt if nxt is not None else step + 1)
                         continue
-                    # Prompt complete: publish its frozen pages for future
-                    # admissions to adopt, then take the first sample.
-                    pool.register_prompt(it.slot, st.prompt)
-                tok = int(toks[it.slot])
-                if id(st.request) not in first_t:
-                    first_t[id(st.request)] = time.perf_counter()
-                counts[it.slot] += 1
-                cur[it.slot] = tok
-                if st.record(tok):
-                    finish(it.slot)
+                    break
+                planned = sum(it.q_len for it in plan)
+                self._m_budget.set(planned / sched.token_budget)
+
+                width = 1 if all(it.q_len == 1 for it in plan) else self._chunk
+                self._step_widths.add(width)
+                tokens = np.full((n_slots, width), self.eos, np.int32)
+                qlens = np.zeros((n_slots,), np.int32)
+                n_decode = n_prefill = 0
+                for it in plan:
+                    st = sched.slots[it.slot]
+                    if it.is_prefill:
+                        seg = st.prompt[st.prompt_pos : st.prompt_pos + it.q_len]
+                        tokens[it.slot, : len(seg)] = seg
+                        n_prefill += it.q_len
+                    else:
+                        tokens[it.slot, 0] = cur[it.slot]
+                        n_decode += 1
+                    qlens[it.slot] = it.q_len
+                    pool.ensure_writable(it.slot, it.q_len)  # grow + CoW forks
+
+                # The device span closes only after the sampled tokens are
+                # host-materialized, so it brackets real device time (the
+                # dispatch itself is async).
+                with tr.span(
+                    "serve.device_step", width=width, rows=len(plan),
+                    tokens=planned,
+                ):
+                    with self._mesh_ctx():
+                        toks_dev, pages = step_fn(
+                            self.params,
+                            jnp.asarray(tokens),
+                            pool.pages,
+                            pool.block_tables,
+                            pool.lens,
+                            qlens,
+                            temps,
+                            seeds,
+                            counts,
+                        )
+                    toks = np.asarray(toks_dev)
+                pool.update_pages(pages)
+                cc = self.compiled_step_count()
+                if cc > last_cc:
+                    tr.instant("serve.compile", width=width, variants=cc)
+                    self._m_compiles.inc(cc - last_cc)
+                    last_cc = cc
+                step += 1
+                n_steps += 1
+                n_wide += width > 1
+                self._m_tok_decode.inc(n_decode)
+                self._m_tok_prefill.inc(n_prefill)
+                (self._m_steps_wide if width > 1 else self._m_steps_narrow).inc()
+                for it in plan:
+                    st = sched.slots[it.slot]
+                    pool.advance(it.slot, it.q_len)
+                    if it.is_prefill:
+                        st.prompt_pos += it.q_len
+                        if not it.finishes_prompt:
+                            continue
+                        # Prompt complete: publish its frozen pages for future
+                        # admissions to adopt, then take the first sample.
+                        pool.register_prompt(it.slot, st.prompt)
+                    tok = int(toks[it.slot])
+                    if id(st.request) not in first_t:
+                        first_t[id(st.request)] = time.perf_counter()
+                    counts[it.slot] += 1
+                    cur[it.slot] = tok
+                    if st.record(tok):
+                        finish(it.slot)
+                pool.emit_gauges()
+                if self.llc is not None:
+                    self.llc.maybe_sample(n_steps, pool)
+            self._m_step_time.observe(time.perf_counter() - t_iter)
+            if self._log_every and n_steps and n_steps % self._log_every == 0:
+                self._log_stats_line(n_steps, pool, sched)
 
         # Deterministic work counters for benches / CI trend lines (wall
-        # clock on a shared CI box is noisy; step counts are not).
-        self.last_stats = {
-            "mixed_steps": n_steps,
-            "wide_steps": n_wide,
-            "pages_adopted": pool.shared_hits,
-            "prompt_tokens_adopted": pool.shared_tokens,
-            "cow_forks": pool.cow_forks,
-        }
+        # clock on a shared CI box is noisy; step counts are not). Typed
+        # snapshot of this stream; cumulative totals live in the registry.
+        self.last_stats = StepStats(
+            mixed_steps=n_steps,
+            wide_steps=n_wide,
+            pages_adopted=pool.shared_hits,
+            prompt_tokens_adopted=pool.shared_tokens,
+            cow_forks=pool.cow_forks,
+        )
         return [results[id(r)] for r in requests]
+
+    def _log_stats_line(self, n_steps: int, pool, sched) -> None:
+        """Periodic one-line operational summary (launchers enable it)."""
+        v = self.obs.value
+        print(
+            f"[serve] step {n_steps}: "
+            f"queue={len(sched.waiting)} active={len(sched.active_slots())} "
+            f"tokens dec/pre={v('serve.step.tokens', kind='decode'):.0f}"
+            f"/{v('serve.step.tokens', kind='prefill'):.0f} "
+            f"gen={v('serve.tokens.generated'):.0f} "
+            f"pool free={pool.alloc.free_count} "
+            f"occ={v('pool.occupancy_frac'):.0%} "
+            f"adopted={pool.shared_hits} cow={pool.cow_forks}"
+        )
 
     def _admit(
         self, req: Request, slot: int, sched, pool, temps, seeds, counts, idx: int

@@ -147,6 +147,7 @@ class PagedKVPool:
         *,
         dtype=None,
         prefix_sharing: bool = True,
+        registry=None,
     ):
         if cfg.window is not None:
             raise ValueError("paged KV pools require full attention (window=None)")
@@ -181,10 +182,20 @@ class PagedKVPool:
         self._chain_next: dict[int, tuple[int, np.ndarray]] = {}
         self._page_parent: dict[int, int] = {}
         # Counters for benches/tests: pages / prompt tokens adopted instead
-        # of recomputed, and CoW forks performed.
+        # of recomputed, and CoW forks performed. With a ``repro.obs``
+        # registry attached the same counts are published as ``pool.*``
+        # counter series (and ``emit_gauges`` adds occupancy/refcount
+        # gauges); the plain ints stay authoritative for registry-less use.
         self.shared_hits = 0
         self.shared_tokens = 0
         self.cow_forks = 0
+        self._registry = registry
+        if registry is not None:
+            self._m_adopted = registry.counter("pool.pages_adopted")
+            self._m_adopted_tokens = registry.counter("pool.tokens_adopted")
+            self._m_cow = registry.counter("pool.cow_forks")
+            # Pre-create the gauges so every pool series exists from step 0.
+            self.emit_gauges()
 
     # ---- admission / lifecycle ----------------------------------------------
 
@@ -261,6 +272,9 @@ class PagedKVPool:
             self._ref[pid] += 1
         self.shared_hits += len(pids)
         self.shared_tokens += covered
+        if self._registry is not None and pids:
+            self._m_adopted.inc(len(pids))
+            self._m_adopted_tokens.inc(covered)
         self._slot_pages[slot] = list(pids)
         self._slot_reserved[slot] = need
         self.alloc.reserved += need
@@ -299,6 +313,8 @@ class PagedKVPool:
                 if self._ref[pid] > 1:
                     nid = self._take_page(slot)
                     self.cow_forks += 1
+                    if self._registry is not None:
+                        self._m_cow.inc()
                     for name in self.pages:
                         self.pages[name] = _copy_page(
                             self.pages[name],
@@ -398,6 +414,25 @@ class PagedKVPool:
                 assert self.block_tables[slot, pg] == 0
         for parent, (pid, _) in self._chain_next.items():
             assert self._page_parent.get(pid) == parent
+
+    # ---- telemetry -----------------------------------------------------------
+
+    def emit_gauges(self, registry=None) -> None:
+        """Publish the pool's occupancy/sharing state as ``pool.*`` gauges:
+        free/reserved page counts, occupancy fraction of the allocatable
+        pool, pages currently shared (refcount > 1) and registered in the
+        prefix registry. Cheap (a handful of numpy reductions); the engine
+        calls it once per mixed step."""
+        registry = registry if registry is not None else self._registry
+        if registry is None:
+            return
+        n_alloc = self.alloc.n_pages - 1  # dummy page 0 excluded
+        held = n_alloc - self.alloc.free_count
+        registry.gauge("pool.pages_free").set(self.alloc.free_count)
+        registry.gauge("pool.pages_reserved").set(self.alloc.reserved)
+        registry.gauge("pool.occupancy_frac").set(held / max(n_alloc, 1))
+        registry.gauge("pool.shared_pages").set(int((self._ref > 1).sum()))
+        registry.gauge("pool.registered_pages").set(len(self._page_parent))
 
     # ---- step plumbing -------------------------------------------------------
 

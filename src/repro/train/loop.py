@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
 from repro.data.pipeline import DataConfig, make_batch_iterator
 from repro.models.model import LM
+from repro.obs import Registry, Tracer
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault_tolerance import FailureInjector, StepTimeout, Watchdog
 from repro.train.step import make_train_state, make_train_step, shard_state
@@ -33,6 +34,23 @@ class TrainResult:
     losses: list
     resumed_from: Optional[int]
     interrupted: bool = False
+    registry: Optional[Registry] = None   # step metrics (repro.obs)
+    tracer: Optional[Tracer] = None       # step/checkpoint spans
+
+
+def _batch_tokens(batch) -> int:
+    """Token count of one batch (throughput accounting): the ``tokens``
+    leaf when present, else the largest integer leaf's element count."""
+    if isinstance(batch, dict):
+        if "tokens" in batch:
+            return int(np.prod(np.shape(batch["tokens"])))
+        sizes = [
+            int(np.prod(np.shape(v)))
+            for v in batch.values()
+            if np.issubdtype(np.asarray(v).dtype, np.integer)
+        ]
+        return max(sizes, default=0)
+    return 0
 
 
 def run_training(
@@ -47,15 +65,33 @@ def run_training(
     step_timeout_s: float = 0.0,
     log_every: int = 10,
     make_batch: Optional[Callable[[int], dict]] = None,
+    registry: Optional[Registry] = None,
+    tracer: Optional[Tracer] = None,
 ) -> TrainResult:
     steps = steps or tcfg.total_steps
     ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+
+    # Telemetry (repro.obs): per-step time/loss/grad-norm metrics and
+    # step/checkpoint spans. Defaults to private instances returned on the
+    # TrainResult; recording is in-process only (export is the caller's
+    # sink decision, e.g. launch/train --metrics-out).
+    obs = registry if registry is not None else Registry()
+    tr = tracer if tracer is not None else Tracer()
+    m_steps = obs.counter("train.steps")
+    m_tokens = obs.counter("train.tokens")
+    m_retries = obs.counter("train.steps", event="watchdog_retry")
+    m_step_time = obs.histogram("train.step_time_s")
+    g_loss = obs.gauge("train.loss")
+    g_gnorm = obs.gauge("train.grad_norm")
+    g_lr = obs.gauge("train.lr")
+    g_tput = obs.gauge("train.throughput_tokens_per_s")
 
     with jax.set_mesh(mesh):
         state = make_train_state(lm, tcfg, jax.random.PRNGKey(tcfg.seed))
         resumed_from = None
         if ckpt.latest_step() is not None:
-            state, resumed = ckpt.restore_latest(state)
+            with tr.span("train.restore"):
+                state, resumed = ckpt.restore_latest(state)
             resumed_from = resumed
             log.info("resumed from step %d", resumed)
         state = shard_state(state, pcfg, mesh)
@@ -70,7 +106,8 @@ def run_training(
 
         step_fn, compile_step = make_train_step(lm, tcfg, pcfg, mesh)
         batch0 = batch_fn(start)
-        compiled = compile_step(state, batch0)
+        with tr.span("train.compile"):
+            compiled = compile_step(state, batch0)
 
         losses = []
         interrupted = False
@@ -78,23 +115,42 @@ def run_training(
         i = start
         while i < steps:
             batch = batch_fn(i) if i != start else batch0
+            t_step = time.perf_counter()
             try:
                 if injector is not None:
                     injector.maybe_fail(i)
-                if step_timeout_s > 0:
-                    with Watchdog(step_timeout_s):
+                # The span closes after float(loss) blocks, so it covers
+                # real device step time, not the async dispatch.
+                with tr.span("train.step", step=i):
+                    if step_timeout_s > 0:
+                        with Watchdog(step_timeout_s):
+                            state, metrics = compiled(state, batch)
+                            loss = float(metrics["loss"])  # blocks inside watchdog
+                    else:
                         state, metrics = compiled(state, batch)
-                        loss = float(metrics["loss"])  # blocks inside watchdog
-                else:
-                    state, metrics = compiled(state, batch)
-                    loss = float(metrics["loss"])
+                        loss = float(metrics["loss"])
             except StepTimeout:
                 log.warning("step %d hit watchdog; re-running batch", i)
+                tr.instant("train.watchdog_retry", step=i)
+                m_retries.inc()
                 continue  # straggler mitigation: redo the step
             except RuntimeError as e:
                 log.error("step %d failed: %s — checkpoint + stop", i, e)
+                tr.instant("train.failure", step=i)
                 interrupted = True
                 break
+            dt_step = time.perf_counter() - t_step
+            n_tok = _batch_tokens(batch)
+            m_steps.inc()
+            m_tokens.inc(n_tok)
+            m_step_time.observe(dt_step)
+            g_loss.set(loss)
+            if "grad_norm" in metrics:
+                g_gnorm.set(float(metrics["grad_norm"]))
+            if "lr" in metrics:
+                g_lr.set(float(metrics["lr"]))
+            if dt_step > 0 and n_tok:
+                g_tput.set(n_tok / dt_step)
             losses.append(loss)
             if not np.isfinite(loss):
                 raise FloatingPointError(f"non-finite loss at step {i}: {loss}")
@@ -102,13 +158,17 @@ def run_training(
                 dt = time.time() - t0
                 log.info("step %d loss %.4f (%.2fs elapsed)", i, loss, dt)
             if tcfg.checkpoint_every and (i + 1) % tcfg.checkpoint_every == 0:
-                ckpt.save(state, i)
+                with tr.span("train.checkpoint", step=i):
+                    ckpt.save(state, i)
             i += 1
 
-        ckpt.save(state, max(i - 1, 0), blocking=True)
+        with tr.span("train.checkpoint", step=max(i - 1, 0), final=True):
+            ckpt.save(state, max(i - 1, 0), blocking=True)
         return TrainResult(
             final_step=i - 1,
             losses=losses,
             resumed_from=resumed_from,
             interrupted=interrupted,
+            registry=obs,
+            tracer=tr,
         )
