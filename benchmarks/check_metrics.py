@@ -37,6 +37,7 @@ REQUIRED_COUNTER_SERIES = (
     ("serve.steps", {"width": "narrow"}),
     ("pool.pages_adopted", {}),
     ("pool.cow_forks", {}),
+    ("serve.order_switches", {}),
 )
 REQUIRED_GAUGES = (
     "pool.occupancy_frac",
@@ -44,12 +45,13 @@ REQUIRED_GAUGES = (
     "pool.shared_pages",
     "serve.queue_depth",
     "serve.budget_utilization",
+    "serve.current_order",
     "llc.footprint_bytes",
 )
 MIN_LLC_ORDERS = 2
 
 
-def check_metrics(path: str, errors: list) -> None:
+def check_metrics(path: str, errors: list, min_order_switches: int = 0) -> None:
     try:
         with open(path) as f:
             lines = [json.loads(ln) for ln in f if ln.strip()]
@@ -96,6 +98,15 @@ def check_metrics(path: str, errors: list) -> None:
             f"{path}: llc.modeled_miss_bytes gauges cover {sorted(llc_orders)} "
             f"— need >= {MIN_LLC_ORDERS} traversal orders"
         )
+
+    if min_order_switches > 0:
+        rec = by_kind["counter"].get(("serve.order_switches", ()))
+        got = rec.get("value", 0) if rec else 0
+        if got < min_order_switches:
+            errors.append(
+                f"{path}: serve.order_switches = {got} — the adaptation "
+                f"smoke requires >= {min_order_switches} order switch(es)"
+            )
 
     for (name, labels), rec in by_kind["histogram"].items():
         buckets = rec.get("buckets", [])
@@ -145,10 +156,13 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("metrics", help="metrics JSONL from --metrics-out")
     ap.add_argument("trace", help="Chrome-trace JSON from --trace-out")
+    ap.add_argument("--min-order-switches", type=int, default=0, metavar="N",
+                    help="require the serve.order_switches counter to be "
+                         ">= N (the --attn-order auto adaptation smoke)")
     args = ap.parse_args()
 
     errors: list[str] = []
-    check_metrics(args.metrics, errors)
+    check_metrics(args.metrics, errors, min_order_switches=args.min_order_switches)
     check_trace(args.trace, errors)
     if errors:
         print(f"check_metrics: {len(errors)} violation(s):")

@@ -149,11 +149,16 @@ def record_winner(kind: str, key: dict, winner: dict) -> None:
 
     One JSONL line per winner through the shared ``repro.obs.export`` sink
     (``schema_version`` stamped), keyed by (arch, seq bucket, capacity,
-    backend) — the lookup key an engine-start autotune consultation needs
-    (ROADMAP item 4). Append-only: later entries with the same key win.
+    backend) — the lookup key the serve engine's startup consultation
+    (``repro.obs.autotune.load_autotune_cache``) resolves. The key passes
+    through the same ``canonicalize_key`` normalization the reader dedups
+    with, so writer and reader agree on what "same key" means. Append-only:
+    later entries with the same key win (last-writer-wins on load).
     """
+    from repro.obs.autotune import canonicalize_key
     from repro.obs.export import append_jsonl
 
+    key = canonicalize_key(key)
     rec = append_jsonl(AUTOTUNE_CACHE, {"key": key, "winner": winner}, kind=kind)
     print(f"[autotune-cache] {kind} {key} -> {AUTOTUNE_CACHE} "
           f"(schema_version={rec['schema_version']})")

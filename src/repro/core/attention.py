@@ -20,7 +20,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedule import KVSchedule, Order, Traversal
+from repro.core.schedule import (
+    KVSchedule,
+    Order,
+    Traversal,
+    page_visit_order_dynamic,
+)
 
 __all__ = [
     "mha_reference",
@@ -416,6 +421,7 @@ def decode_attention(
     q_lens: Optional[jax.Array] = None,
     order: Order | str = Order.CYCLIC,
     snake_group: Optional[int] = None,
+    order_group: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Single-position decode attention against a (possibly padded) KV cache.
 
@@ -431,7 +437,10 @@ def decode_attention(
     decode step, parity keyed on ``cache_len``). The paged path is ragged:
     q may carry C > 1 chunk positions per row with per-row ``q_lens``
     (chunked prefill / mixed serve steps) — see
-    :func:`paged_decode_attention`.
+    :func:`paged_decode_attention`. ``order_group`` (paged only) overrides
+    the static order with a traced effective reversal-group scalar
+    (``schedule.resolve_order_group``) so the order can change per step
+    without retracing.
     """
     if block_table is not None:
         return paged_decode_attention(
@@ -445,8 +454,10 @@ def decode_attention(
             scale=scale,
             order=order,
             snake_group=snake_group,
+            order_group=order_group,
         )
     assert q_lens is None, "q_lens requires the paged layout (block_table)"
+    assert order_group is None, "order_group requires the paged layout"
     b, one, hq, d = q.shape
     assert one == 1
     _, s_max, hkv, _ = k_cache.shape
@@ -477,6 +488,7 @@ def paged_decode_attention(
     scale: Optional[float] = None,
     order: Order | str = Order.CYCLIC,
     snake_group: Optional[int] = None,
+    order_group: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Blockwise ragged attention over a paged KV pool, schedule-ordered.
 
@@ -520,11 +532,18 @@ def paged_decode_attention(
     q_pos = (lens - qls)[:, None] + tq          # (B, C)
     q_valid = tq < qls[:, None]
 
-    sched = KVSchedule(
-        order, n_q=1, n_kv=n_blocks, causal=False, q_block=1, kv_block=page,
-        snake_group=snake_group,
-    )
-    visit = sched.page_order(lens)  # (B, n_blocks) logical page ids
+    if order_group is not None:
+        # Runtime-switchable order: the effective reversal group arrives as
+        # a traced scalar operand (schedule.resolve_order_group), so a serve
+        # engine can flip cyclic/sawtooth/block_snake between steps inside
+        # one compiled step — the static ``order`` argument is ignored.
+        visit = page_visit_order_dynamic(lens, n_blocks, order_group)
+    else:
+        sched = KVSchedule(
+            order, n_q=1, n_kv=n_blocks, causal=False, q_block=1,
+            kv_block=page, snake_group=snake_group,
+        )
+        visit = sched.page_order(lens)  # (B, n_blocks) logical page ids
     phys = jnp.take_along_axis(block_table.astype(jnp.int32), visit, axis=1)
 
     qf = q.astype(jnp.float32).reshape(b, c, hkv, g, d).transpose(0, 2, 3, 1, 4)

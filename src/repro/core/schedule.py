@@ -61,6 +61,8 @@ __all__ = [
     "kv_index",
     "kv_index_host",
     "page_visit_order",
+    "page_visit_order_dynamic",
+    "resolve_order_group",
     "step_page_visits",
     "tile_ids",
     "num_kv_tiles_for",
@@ -116,6 +118,43 @@ def _resolve_group(order: Order, snake_group: Optional[int], n: int) -> int:
     if g < 1:
         raise ValueError(f"snake_group must be >= 1, got {snake_group}")
     return max(1, min(g, int(n)))
+
+
+def resolve_order_group(
+    order: Order | str, snake_group: Optional[int], n_kv: int
+) -> int:
+    """Public :func:`_resolve_group`: (order, snake_group, range) -> the
+    effective reversal-group size, the *single scalar* that distinguishes
+    the three order families (cyclic=1, sawtooth=n, block_snake=g).
+
+    This is the runtime-switchable encoding of a traversal order: because
+    the grouped-reversal arithmetic is one formula parameterized by this
+    group, a consumer that takes the group as a **traced operand**
+    (:func:`page_visit_order_dynamic`) can change order between steps with
+    zero recompiles — the serve engine's online order adaptation rides on
+    exactly this.
+    """
+    return _resolve_group(Order.parse(order), snake_group, int(n_kv))
+
+
+def page_visit_order_dynamic(parity, n_kv: int, group) -> jax.Array:
+    """:func:`page_visit_order` with the reversal group as a traced operand.
+
+    ``group`` is the effective group size from :func:`resolve_order_group`
+    (1 = cyclic, ``n_kv`` = sawtooth, g = block_snake) and may be a traced
+    int scalar — the same compiled computation serves every order, so the
+    serve engine can rebind the visit order per step without retracing.
+    Out-of-range groups are clamped to [1, n_kv]; identical arithmetic to
+    the static path (the parity test suite pins the equivalence).
+    """
+    j = jnp.arange(n_kv, dtype=jnp.int32)[None, :]
+    p = jnp.atleast_1d(jnp.asarray(parity, jnp.int32))[:, None]
+    g = jnp.clip(jnp.asarray(group, jnp.int32), 1, n_kv)
+    base = (j // g) * g
+    size = jnp.minimum(g, n_kv - base)
+    rev = base + (size - 1) - (j - base)
+    # group 1 (cyclic) makes rev == j, so the parity select is a no-op there.
+    return jnp.where(p % 2 == 0, jnp.broadcast_to(j, rev.shape), rev)
 
 
 def _snake_pos_host(parity: int, j: int, n: int, group: int) -> int:

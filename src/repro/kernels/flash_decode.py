@@ -41,7 +41,12 @@ except ImportError:  # pragma: no cover
     pltpu = None
     _CompilerParams = None
 
-from repro.core.schedule import Order, Traversal, kv_index
+from repro.core.schedule import (
+    Order,
+    Traversal,
+    kv_index,
+    page_visit_order_dynamic,
+)
 from repro.kernels.flash_attention import MASK_VALUE, LANES, _pad_axis
 
 __all__ = ["flash_decode_fwd", "paged_flash_decode_fwd"]
@@ -180,6 +185,7 @@ def flash_decode_fwd(
     interpret: bool = False,
     block_table: Optional[jax.Array] = None,
     q_lens: Optional[jax.Array] = None,
+    order_group: Optional[jax.Array] = None,
 ) -> jax.Array:
     """q (B,1,Hq,D); caches (B,S_max,Hkv,D); cache_len scalar or (B,).
 
@@ -187,7 +193,9 @@ def flash_decode_fwd(
     (n_pages, page, Hkv, D) and the kernel visits each row's pages through
     the block table in schedule order; q may then carry C > 1 ragged chunk
     positions per row with per-row ``q_lens`` (see
-    :func:`paged_flash_decode_fwd`).
+    :func:`paged_flash_decode_fwd`). ``order_group`` (paged only) replaces
+    the static order with a traced effective reversal-group operand so the
+    visit order can change per step without retracing.
     """
     if block_table is not None:
         return paged_flash_decode_fwd(
@@ -202,8 +210,10 @@ def flash_decode_fwd(
             scale=scale,
             snake_group=snake_group,
             interpret=interpret,
+            order_group=order_group,
         )
     assert q_lens is None, "q_lens requires the paged layout (block_table)"
+    assert order_group is None, "order_group requires the paged layout"
     return _flash_decode_contiguous(
         q,
         k_cache,
@@ -327,6 +337,7 @@ def paged_flash_decode_fwd(
     scale: Optional[float] = None,
     snake_group: Optional[int] = None,
     interpret: bool = False,
+    order_group: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Ragged paged attention: q (B,C,Hq,D); pools (n_pages, page, Hkv, D).
 
@@ -351,17 +362,26 @@ def paged_flash_decode_fwd(
     g = hq // hkv
     scale_ = float(d**-0.5 if scale is None else scale)
 
-    tr = Traversal(
-        order=order, n_q=1, n_kv=n_blocks, q_block=1, kv_block=page,
-        snake_group=snake_group,
-    )
     lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
     qls = (
         jnp.full((b,), c, jnp.int32)
         if q_lens is None
         else jnp.broadcast_to(jnp.asarray(q_lens, jnp.int32), (b,))
     )
-    visit = tr.visit_order(lens)  # (B, n_blocks) logical
+    if order_group is not None:
+        # Runtime-switchable order: the schedule is already folded into the
+        # scalar-prefetch operands outside the kernel, so rebinding the
+        # visit order is pure data — the effective reversal group arrives
+        # as a traced scalar (schedule.resolve_order_group) and the static
+        # ``order``/``snake_group`` arguments are ignored. The kernel body
+        # is untouched; no recompile happens across order switches.
+        visit = page_visit_order_dynamic(lens, n_blocks, order_group)
+    else:
+        tr = Traversal(
+            order=order, n_q=1, n_kv=n_blocks, q_block=1, kv_block=page,
+            snake_group=snake_group,
+        )
+        visit = tr.visit_order(lens)  # (B, n_blocks) logical
     phys = jnp.take_along_axis(block_table.astype(jnp.int32), visit, axis=1)
     meta = jnp.stack([lens, qls], axis=1)  # (B, 2)
 

@@ -232,6 +232,7 @@ def attention_decode(
     block_table: Optional[jax.Array] = None,
     q_lens: Optional[jax.Array] = None,
     snake_group: Optional[int] = None,
+    order_group: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Decode / ragged-chunk attention vs a KV cache. Not differentiated.
 
@@ -242,6 +243,11 @@ def attention_decode(
     positions per row with per-row ``q_lens`` valid rows and causal masking
     inside the chunk — the serve engine's unified mixed step (decode rows
     at q_len 1 + chunked prefill rows) runs through exactly this call.
+    ``order_group`` (paged only) overrides the static ``order`` with a
+    traced effective reversal-group scalar
+    (``core.schedule.resolve_order_group``) — both backends then compute
+    the visit order from that operand, so the serve engine's online order
+    adaptation switches traversal orders with zero recompiles.
     """
     order = Order.parse(order)
     impl = _resolve(impl)
@@ -259,6 +265,7 @@ def attention_decode(
             interpret=(impl == "pallas_interpret"),
             block_table=block_table,
             q_lens=q_lens,
+            order_group=order_group,
         )
     if impl in ("xla", "reference"):
         return core_attn.decode_attention(
@@ -272,6 +279,7 @@ def attention_decode(
             q_lens=q_lens,
             order=order,
             snake_group=snake_group,
+            order_group=order_group,
         )
     raise ValueError(f"unknown decode impl: {impl!r}")
 

@@ -15,6 +15,13 @@ series, and ``--trace-out trace.json`` writes the step spans as
 Chrome-trace JSON — open it in ``chrome://tracing`` or Perfetto. The
 ``llc.*`` gauges sample every ``--llc-every`` mixed steps (0 disables);
 ``--log-every`` prints a periodic one-line stats summary mid-stream.
+
+``--attn-order auto`` turns on online traversal-order adaptation
+(``repro.serve.adapt``): the engine seeds its initial order from the
+hillclimb autotune cache (``--autotune-cache``) and then, every
+``--adapt-epoch`` mixed steps, re-picks the order from the live modeled-LLC
+gauges (hysteresis via ``--adapt-hysteresis`` / ``--adapt-confirm``).
+Switches rebind the step's ``order_group`` operand — zero recompiles.
 """
 
 from __future__ import annotations
@@ -55,10 +62,28 @@ def main():
     ap.add_argument("--ckpt-dir", default=None, help="restore params from here")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--attn-order", default="sawtooth",
-                    choices=[o.value for o in Order],
-                    help="KV traversal order (core/schedule.py Traversal IR)")
+                    choices=[o.value for o in Order] + ["auto"],
+                    help="KV traversal order (core/schedule.py Traversal IR); "
+                         "'auto' enables online adaptation: seed from the "
+                         "autotune cache, then re-pick from the live "
+                         "modeled-LLC gauges every --adapt-epoch steps")
     ap.add_argument("--snake-group", type=int, default=None,
                     help="block_snake reversal window in KV tiles")
+    ap.add_argument("--adapt-epoch", type=int, default=8,
+                    help="adaptation decision cadence in mixed steps "
+                         "(--attn-order auto)")
+    ap.add_argument("--adapt-hysteresis", type=float, default=0.05,
+                    help="minimum fractional modeled-miss-byte improvement "
+                         "before an order switch (--attn-order auto)")
+    ap.add_argument("--adapt-confirm", type=int, default=2,
+                    help="consecutive qualifying samples required before "
+                         "switching (--attn-order auto)")
+    ap.add_argument("--autotune-cache",
+                    default="artifacts/hillclimb/autotune_cache.jsonl",
+                    metavar="PATH",
+                    help="hillclimb autotune-cache JSONL consulted at engine "
+                         "start to seed the initial order (--attn-order auto; "
+                         "missing file is fine)")
     ap.add_argument(
         "--scheduler", default="auto", choices=["auto", "static", "continuous"]
     )
@@ -85,10 +110,22 @@ def main():
                     help="print a one-line stats summary every N mixed steps")
     args = ap.parse_args()
 
+    if args.attn_order == "block_snake" and args.snake_group is None:
+        valid = ", ".join(repr(o.value) for o in Order) + ", 'auto'"
+        ap.error(
+            f"traversal order 'block_snake' needs --snake-group (the reversal "
+            f"window in KV tiles); valid orders are: {valid}"
+        )
+    adapt = args.attn_order == "auto"
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    cfg = cfg.with_(attn_order=args.attn_order, snake_group=args.snake_group)
+    if not adapt:
+        # 'auto' keeps the arch's configured order as the pre-seed starting
+        # point; the controller re-seeds/re-picks it from there.
+        cfg = cfg.with_(attn_order=args.attn_order)
+    cfg = cfg.with_(snake_group=args.snake_group)
     lm = build_model(cfg)
     params = lm.init(jax.random.PRNGKey(0))
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
@@ -111,7 +148,20 @@ def main():
             args.llc_capacity_mib * 2**20 if args.llc_capacity_mib else None
         ),
         log_every_steps=args.log_every,
+        adapt_order=adapt,
+        adapt_epoch=args.adapt_epoch,
+        adapt_hysteresis=args.adapt_hysteresis,
+        adapt_confirm=args.adapt_confirm,
+        autotune_cache=args.autotune_cache,
     )
+    if adapt and eng.order_ctl is not None:
+        src = eng.order_ctl.seeded_from
+        seeded = "seeded from autotune cache" if src else "no autotune-cache hit"
+        print(
+            f"order adaptation on: starting order={eng.order_ctl.order.value} "
+            f"({seeded}), epoch={args.adapt_epoch}, "
+            f"hysteresis={args.adapt_hysteresis}, confirm={args.adapt_confirm}"
+        )
     rng = np.random.default_rng(0)
     reqs = [
         Request(

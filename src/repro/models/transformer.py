@@ -224,6 +224,10 @@ def _attn_decode_paged(cfg: ModelConfig, cache: dict, q, k, v):
     cache["len"] = lens + q_lens
 
     valid = jnp.minimum(lens + q_lens, capacity)
+    # ``order_group`` rides the cache dict like ``q_len``: a traced
+    # effective reversal-group scalar that overrides cfg.attn_order for
+    # this step (the serve engine's runtime order switch; absent outside
+    # the continuous path, where the static config order applies).
     o = ops.attention_decode(
         q,
         _cache_read(cfg, cache, "k_pages"),
@@ -234,6 +238,7 @@ def _attn_decode_paged(cfg: ModelConfig, cache: dict, q, k, v):
         impl=cfg.attn_impl,
         block_table=bt,
         q_lens=q_lens,
+        order_group=cache.get("order_group"),
     )
     return o, cache
 

@@ -12,6 +12,12 @@ next — the online traversal-order adaptation that reads
 the train loop carry their own instances so streams don't interleave.
 """
 
+from repro.obs.autotune import (
+    canonicalize_key,
+    load_autotune_cache,
+    lookup_order_winner,
+    normalize_autotune_key,
+)
 from repro.obs.export import (
     SCHEMA_VERSION,
     append_jsonl,
@@ -33,7 +39,11 @@ from repro.obs.trace import SpanEvent, Tracer, default_tracer, instant, span
 __all__ = [
     "SCHEMA_VERSION",
     "append_jsonl",
+    "canonicalize_key",
+    "load_autotune_cache",
     "load_jsonl",
+    "lookup_order_winner",
+    "normalize_autotune_key",
     "metric_records",
     "write_metrics_jsonl",
     "DEFAULT_CAPACITY_BYTES",

@@ -15,9 +15,12 @@ evaluates them against the *live* ``serve.kv_pool.PagedKVPool`` state every
   ``llc.shared_pages`` — the inputs, so a dashboard can plot modeled misses
   against the footprint that produced them;
 * ``llc.best_order_index`` — argmin over the fwd gauges (index into
-  :attr:`LLCSampler.orders`), i.e. *the* decision signal ROADMAP item 4's
-  online order adaptation will consume. This module lands it read-only:
-  nothing here switches the order, it only makes the switch observable.
+  :attr:`LLCSampler.orders`), i.e. *the* decision signal the online order
+  adaptation (``repro.serve.adapt.OrderAdaptController``) consumes. Beyond
+  the gauges (last-write-wins), every sample also appends one entry to
+  :attr:`LLCSampler.history` — footprint + per-order modeled miss bytes +
+  the order in effect — so controllers and benches can account modeled
+  bytes over time, not just read the latest value.
 
 The model replay is host-side Python over O(tiles²) wavefront steps — at
 serve page granularity that is thousands of dict operations, so sampling
@@ -86,6 +89,17 @@ class LLCSampler:
         self.n_workers = n_workers
         self.capacity_bytes = float(capacity_bytes)
         self.samples = 0
+        # Per-sample record of the fwd-model evaluation: the adaptation
+        # controller reads the latest entry to decide a switch, and benches
+        # integrate modeled bytes over the run. Bounded so a long-lived
+        # server can't grow it without limit.
+        self.history: list[dict] = []
+        self.history_cap = 4096
+
+    @property
+    def last_fwd_miss(self) -> Optional[dict]:
+        """Per-order modeled fwd miss bytes of the latest sample (or None)."""
+        return self.history[-1]["fwd_miss"] if self.history else None
 
     # ---- deterministic model inputs (public: tests re-derive these) ----------
 
@@ -153,6 +167,21 @@ class LLCSampler:
                 res.misses
             )
         reg.gauge("llc.best_order_index").set(fwd_miss.index(min(fwd_miss)))
+        # ``current_order`` here is the order in effect when the sample was
+        # taken; a controller that switches on this sample rewrites the
+        # entry so the history reflects the order driving the *next* steps.
+        self.history.append(
+            {
+                "sample": self.samples,
+                "max_len": fp["max_len"],
+                "footprint_bytes": fp["resident_bytes"],
+                "active_rows": fp["active_rows"],
+                "fwd_miss": dict(zip(self.orders, fwd_miss)),
+                "current_order": self.current_order,
+            }
+        )
+        if len(self.history) > self.history_cap:
+            del self.history[: -self.history_cap]
 
         if fp["shared_pages"] and fp["active_rows"] > 1:
             prefix_pages = max(1, fp["shared_pages"])

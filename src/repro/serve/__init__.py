@@ -1,3 +1,4 @@
+from repro.serve.adapt import ORDER_INDEX, OrderAdaptController
 from repro.serve.engine import (
     CONTINUOUS_FAMILIES,
     GenerationResult,
@@ -10,6 +11,8 @@ from repro.serve.kv_pool import PagedKVPool, PagePool, assemble_cache_view
 from repro.serve.scheduler import ContinuousScheduler, Slot, StepItem
 
 __all__ = [
+    "ORDER_INDEX",
+    "OrderAdaptController",
     "CONTINUOUS_FAMILIES",
     "GenerationResult",
     "Request",

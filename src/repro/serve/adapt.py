@@ -1,0 +1,205 @@
+"""Online traversal-order adaptation: modeled-LLC signal → visit-order knob.
+
+PR 4's sweeps showed the winning traversal order *flips with KV footprint*
+(cyclic while the working set fits the LLC, block_snake/sawtooth once it is
+capacity-bound); PR 6 made that signal live (``obs.llc.LLCSampler`` gauges
+against the real ``PagedKVPool``). This module closes the loop:
+:class:`OrderAdaptController` seeds its initial order from the persistent
+autotune cache at engine start, then every adaptation epoch re-evaluates the
+per-candidate modeled miss bytes and — with hysteresis — switches the order
+the serve engine binds into its next mixed steps.
+
+The switch itself is free. ``core.schedule.resolve_order_group`` collapses
+an (order, snake_group) pair to the single *effective reversal-group*
+scalar the grouped-reversal formula needs (cyclic=1, sawtooth=n_blocks,
+block_snake=g), and the decode stack accepts that scalar as a **traced
+operand** (``order_group`` through ``assemble_cache_view`` →
+``transformer._attn_decode_paged`` → ``ops.attention_decode``): the visit
+order is data folded into the step's scalar-prefetch operands before the
+kernel launches, not a trace constant, so flipping it between steps causes
+zero recompiles (``ServeEngine.compiled_step_count()`` is invariant across
+switches — pinned by tests).
+
+Hysteresis: modeled miss bytes move with every admission/retirement, and a
+marginal candidate that flaps the order each epoch would churn dashboards
+for no locality gain. A switch therefore requires the best candidate to
+beat the current order by at least ``hysteresis`` (fractional modeled-byte
+improvement) on ``confirm`` *consecutive* samples; any epoch where the
+candidate changes or falls under the threshold resets the count.
+
+Metrics: ``serve.order_switches`` (counter) and ``serve.current_order``
+(gauge, encoded via :data:`ORDER_INDEX` — 0=cyclic, 1=sawtooth,
+2=block_snake — so a step dashboard can overlay order flips on the
+footprint curve). Both series exist even when adaptation is disabled (the
+gauge then just pins the static order), so the CI metrics schema can
+require them unconditionally.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.schedule import DEFAULT_SNAKE_GROUP, Order, resolve_order_group
+from repro.obs.autotune import load_autotune_cache, lookup_order_winner
+from repro.obs.metrics import Registry
+
+__all__ = ["OrderAdaptController", "ORDER_INDEX"]
+
+# Stable gauge encoding of the order families (enum declaration order).
+ORDER_INDEX = {Order.CYCLIC: 0, Order.SAWTOOTH: 1, Order.BLOCK_SNAKE: 2}
+
+
+class OrderAdaptController:
+    """Decide, per adaptation epoch, which traversal order the engine binds.
+
+    The controller owns the engine's *current* (order, snake_group) pair on
+    the continuous path; the engine asks :meth:`effective_group` for the
+    traced operand each step and calls :meth:`maybe_adapt` once per mixed
+    step. ``enabled=False`` keeps the metrics surface (current-order gauge,
+    zero switch counter) but never samples or switches — the pinned-order
+    engine configuration.
+    """
+
+    def __init__(
+        self,
+        registry: Registry,
+        *,
+        order: "Order | str",
+        snake_group: Optional[int] = None,
+        epoch: int = 8,
+        hysteresis: float = 0.05,
+        confirm: int = 2,
+        enabled: bool = True,
+    ):
+        self.registry = registry
+        self.order = Order.parse(order)
+        self.snake_group = snake_group
+        self.epoch = int(epoch)
+        self.hysteresis = float(hysteresis)
+        self.confirm = max(1, int(confirm))
+        self.enabled = enabled
+        self.switches = 0
+        self.seeded_from: Optional[dict] = None
+        self._pending: Optional[str] = None
+        self._pending_count = 0
+        self._m_switches = registry.counter("serve.order_switches")
+        self._m_current = registry.gauge("serve.current_order")
+        self._m_current.set(ORDER_INDEX[self.order])
+
+    # ---- the per-step operand ------------------------------------------------
+
+    def effective_group(self, n_blocks: int) -> int:
+        """Effective reversal-group for the current order over ``n_blocks``
+        pages — the int the engine feeds the mixed step's ``order_group``
+        operand (host int; the jit boundary makes it a traced scalar)."""
+        return resolve_order_group(self.order, self.snake_group, n_blocks)
+
+    @property
+    def candidate_orders(self) -> tuple[str, ...]:
+        """Orders the LLC sampler must model for the controller to choose
+        among — all three families (the current one listed first by the
+        sampler's own convention)."""
+        return (Order.CYCLIC.value, Order.SAWTOOTH.value, Order.BLOCK_SNAKE.value)
+
+    # ---- engine-start cache seeding ------------------------------------------
+
+    def seed_from_cache(
+        self,
+        path: str,
+        *,
+        arch: str,
+        seq_bucket: int,
+        capacity_mib: float,
+        backend: Optional[str] = None,
+    ) -> bool:
+        """Seed (order, snake_group) from the persistent autotune cache.
+
+        Nearest-bucket ``order_sweep`` lookup (``repro.obs.autotune``); on a
+        hit the winner's order replaces the configured initial order before
+        the first step ever runs. Missing file / no arch match → keep the
+        configured order, return False.
+        """
+        rec = lookup_order_winner(
+            load_autotune_cache(path),
+            arch=arch,
+            seq_bucket=seq_bucket,
+            capacity_mib=capacity_mib,
+            backend=backend,
+        )
+        if rec is None:
+            return False
+        winner = rec.get("winner", {})
+        try:
+            self.order = Order.parse(winner["order"])
+        except (KeyError, ValueError):
+            return False
+        if winner.get("snake_group") is not None:
+            self.snake_group = int(winner["snake_group"])
+        self.seeded_from = rec
+        self._m_current.set(ORDER_INDEX[self.order])
+        return True
+
+    # ---- the runtime decision loop -------------------------------------------
+
+    def maybe_adapt(self, step_epoch: int, pool, sampler) -> bool:
+        """Run one adaptation decision if ``step_epoch`` lands on the epoch.
+
+        Samples the LLC models against the live pool (through ``sampler``,
+        an ``obs.llc.LLCSampler``) and applies the hysteresis rule to the
+        fresh per-candidate modeled miss bytes. On a switch, the sampler's
+        notion of the current order — and the history entry that triggered
+        the switch — are updated, so the recorded order is the one driving
+        the *next* steps. Returns True iff the order changed.
+        """
+        if not self.enabled or self.epoch <= 0 or step_epoch % self.epoch != 0:
+            return False
+        if not sampler.sample(pool):
+            return False
+        switched = self.consider(sampler.last_fwd_miss)
+        if switched:
+            sampler.current_order = self.order.value
+            sampler.history[-1]["current_order"] = self.order.value
+        return switched
+
+    def consider(self, fwd_miss: Optional[dict]) -> bool:
+        """Apply the hysteresis rule to one per-order modeled-miss reading.
+
+        Split from :meth:`maybe_adapt` so unit tests (and offline replays)
+        can drive the decision logic with synthetic readings — no pool or
+        sampler required.
+        """
+        if not fwd_miss:
+            return False
+        cur = fwd_miss.get(self.order.value)
+        if cur is None:
+            return False
+        best_order = min(fwd_miss, key=fwd_miss.get)
+        best = fwd_miss[best_order]
+        improvement = (cur - best) / cur if cur > 0 else 0.0
+        if best_order == self.order.value or improvement < self.hysteresis:
+            self._pending, self._pending_count = None, 0
+            return False
+        if self._pending != best_order:
+            self._pending, self._pending_count = best_order, 1
+        else:
+            self._pending_count += 1
+        if self._pending_count < self.confirm:
+            return False
+        self.switch_to(best_order)
+        return True
+
+    def switch_to(self, order: "Order | str") -> None:
+        """Unconditional switch (the hysteresis-approved tail of
+        :meth:`consider`; also the forced-switch hook tests use). Publishes
+        the counter bump and the new gauge value; ``snake_group`` is kept —
+        it parameterizes block_snake whenever that family is (re)entered."""
+        self.order = Order.parse(order)
+        self.switches += 1
+        self._pending, self._pending_count = None, 0
+        self._m_switches.inc()
+        self._m_current.set(ORDER_INDEX[self.order])
+
+    @property
+    def effective_snake_group(self) -> int:
+        """The group block_snake runs at if selected (config or default)."""
+        return DEFAULT_SNAKE_GROUP if self.snake_group is None else self.snake_group

@@ -54,6 +54,7 @@ from repro.dist import sharding as shd
 from repro.models.model import LM, build_model
 from repro.obs import LLCSampler, Registry, Tracer
 from repro.obs.llc import DEFAULT_CAPACITY_BYTES
+from repro.serve.adapt import OrderAdaptController
 from repro.serve.kv_pool import PagedKVPool, assemble_cache_view
 from repro.serve.scheduler import ContinuousScheduler
 
@@ -191,6 +192,11 @@ class ServeEngine:
         llc_every: int = 0,
         llc_capacity_bytes: Optional[float] = None,
         log_every_steps: int = 0,
+        adapt_order: bool = False,
+        adapt_epoch: int = 8,
+        adapt_hysteresis: float = 0.05,
+        adapt_confirm: int = 2,
+        autotune_cache: Optional[str] = None,
     ):
         """Pass ``mesh`` (+ optional ParallelConfig) for sharded serving:
         params are placed on their TP/FSDP shardings and every step runs
@@ -215,7 +221,19 @@ class ServeEngine:
         (``llc.modeled_miss_bytes{order=...}``) every that many mixed steps
         against the live pool footprint (continuous path only);
         ``log_every_steps > 0`` prints a one-line stats summary at that
-        step cadence."""
+        step cadence.
+
+        Online order adaptation (continuous path, DESIGN.md §11):
+        ``adapt_order=True`` lets an :class:`OrderAdaptController` re-pick
+        the KV traversal order every ``adapt_epoch`` mixed steps from the
+        live modeled-LLC gauges — a switch needs ≥ ``adapt_hysteresis``
+        fractional modeled-byte improvement on ``adapt_confirm``
+        consecutive samples — and ``autotune_cache`` (a hillclimb
+        ``autotune_cache.jsonl`` path) seeds the initial order by
+        nearest-bucket lookup before the first step. The traversal order is
+        a traced operand of the mixed step (the ``order_group`` scalar), so
+        switches never recompile; with adaptation off the same operand just
+        stays constant at the configured order."""
         if scheduler not in ("static", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if scheduler == "continuous":
@@ -291,6 +309,7 @@ class ServeEngine:
         self._m_active = r.gauge("serve.active_slots")
         self._m_budget = r.gauge("serve.budget_utilization")
         self.llc: Optional[LLCSampler] = None
+        self.order_ctl: Optional[OrderAdaptController] = None
         if scheduler == "continuous":
             cfg = self.lm.cfg
             elem_bytes = (
@@ -298,6 +317,28 @@ class ServeEngine:
                 if cfg.kv_cache_dtype == "int8"
                 else np.dtype(cfg.activation_dtype()).itemsize
             )
+            capacity = llc_capacity_bytes or DEFAULT_CAPACITY_BYTES
+            # The controller owns the live (order, snake_group) pair — also
+            # when adaptation is off, so serve.current_order /
+            # serve.order_switches exist on every continuous engine and the
+            # step operand has a single source.
+            self.order_ctl = OrderAdaptController(
+                self.obs,
+                order=cfg.attn_order,
+                snake_group=cfg.snake_group,
+                epoch=adapt_epoch,
+                hysteresis=adapt_hysteresis,
+                confirm=adapt_confirm,
+                enabled=adapt_order,
+            )
+            if adapt_order and autotune_cache:
+                self.order_ctl.seed_from_cache(
+                    autotune_cache,
+                    arch=cfg.name,
+                    seq_bucket=max_len,
+                    capacity_mib=capacity / 2**20,
+                    backend=jax.default_backend(),
+                )
             self.llc = LLCSampler(
                 self.obs,
                 page=self._page,
@@ -305,10 +346,15 @@ class ServeEngine:
                 n_kv_heads=cfg.n_kv_heads,
                 head_dim=cfg.hd,
                 elem_bytes=elem_bytes,
-                current_order=cfg.attn_order,
-                snake_group=cfg.snake_group,
+                current_order=self.order_ctl.order.value,
+                snake_group=self.order_ctl.snake_group,
                 every=llc_every,
-                capacity_bytes=llc_capacity_bytes or DEFAULT_CAPACITY_BYTES,
+                capacity_bytes=capacity,
+                **(
+                    {"orders": self.order_ctl.candidate_orders}
+                    if adapt_order
+                    else {}
+                ),
             )
 
     def _mesh_ctx(self):
@@ -476,8 +522,17 @@ class ServeEngine:
             lm, base = self.lm, self.key
             n_layers = lm.cfg.n_layers
 
-            def step(params, tokens, pages, bt, lens, qlens, temps, seeds, counts):
-                caches = assemble_cache_view(pages, bt, lens, n_layers, qlens)
+            def step(
+                params, tokens, pages, bt, lens, qlens, order_group,
+                temps, seeds, counts,
+            ):
+                # ``order_group`` is the traced effective reversal-group
+                # scalar (adapt.OrderAdaptController.effective_group): the
+                # traversal order is step *data*, so the adaptation can
+                # switch it between steps inside this one compiled step.
+                caches = assemble_cache_view(
+                    pages, bt, lens, n_layers, qlens, order_group
+                )
                 logits, caches = lm.decode_step(params, tokens, caches)
                 # Each row samples at its last valid chunk position (the
                 # prompt's final token for a finishing prefill row, the
@@ -621,6 +676,11 @@ class ServeEngine:
                             pool.block_tables,
                             pool.lens,
                             qlens,
+                            np.int32(
+                                self.order_ctl.effective_group(
+                                    pool.blocks_per_seq
+                                )
+                            ),
                             temps,
                             seeds,
                             counts,
@@ -656,7 +716,16 @@ class ServeEngine:
                     if st.record(tok):
                         finish(it.slot)
                 pool.emit_gauges()
-                if self.llc is not None:
+                if self.order_ctl is not None and self.order_ctl.enabled:
+                    # Adaptation drives its own sampling cadence (the
+                    # decision needs a fresh reading, not a stale gauge).
+                    if self.order_ctl.maybe_adapt(n_steps, pool, self.llc):
+                        tr.instant(
+                            "serve.order_switch",
+                            order=self.order_ctl.order.value,
+                            step=n_steps,
+                        )
+                elif self.llc is not None:
                     self.llc.maybe_sample(n_steps, pool)
             self._m_step_time.observe(time.perf_counter() - t_iter)
             if self._log_every and n_steps and n_steps % self._log_every == 0:

@@ -54,7 +54,7 @@ __all__ = ["PagePool", "PagedKVPool", "assemble_cache_view"]
 
 
 def assemble_cache_view(
-    pages: dict, block_table, lens, n_layers: int, q_lens=None
+    pages: dict, block_table, lens, n_layers: int, q_lens=None, order_group=None
 ) -> dict:
     """Splice block tables + lengths into a page pytree for ``decode_step``.
 
@@ -62,8 +62,12 @@ def assemble_cache_view(
     scanned decode carries one copy per layer (a few KB — uniformity with
     the contiguous cache pytree is worth more than the bytes). ``q_lens``
     (B,) adds the ragged mixed step's per-row valid chunk counts
-    (``transformer.attn_decode`` reads it as ``cache["q_len"]``). Traceable:
-    the engine calls this inside its fused jitted mixed step.
+    (``transformer.attn_decode`` reads it as ``cache["q_len"]``);
+    ``order_group`` a traced effective reversal-group scalar
+    (``core.schedule.resolve_order_group``) that overrides the config's
+    static traversal order for this step (``cache["order_group"]`` — the
+    online order adaptation's rebind channel). Traceable: the engine calls
+    this inside its fused jitted mixed step.
     """
     view = dict(pages)
     bt = jnp.asarray(block_table)
@@ -73,6 +77,9 @@ def assemble_cache_view(
     if q_lens is not None:
         ql = jnp.asarray(q_lens)
         view["q_len"] = jnp.broadcast_to(ql, (n_layers,) + ql.shape)
+    if order_group is not None:
+        og = jnp.asarray(order_group, jnp.int32)
+        view["order_group"] = jnp.broadcast_to(og, (n_layers,) + og.shape)
     return view
 
 

@@ -1,0 +1,314 @@
+"""Online traversal-order adaptation (repro.serve.adapt + repro.obs.autotune).
+
+* the dynamic ``order_group`` operand: ``page_visit_order_dynamic`` is
+  bitwise-identical to the static ``KVSchedule.page_order`` for every order
+  family × group size, so switching the operand can never change math;
+* controller decision logic: hysteresis threshold, consecutive-sample
+  confirmation, pending-candidate resets, epoch gating, metrics surface;
+* the autotune cache: key canonicalization (shared writer/reader helper),
+  JSONL load with last-writer-wins dedup and unknown-schema tolerance,
+  nearest-bucket winner lookup, and controller seeding from it;
+* engine integration: a forced mid-stream order switch produces a
+  bitwise-identical token stream to both pinned orders and does not add a
+  single compiled step (the zero-recompile guarantee the operand design
+  exists for).
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.schedule import (
+    KVSchedule,
+    Order,
+    page_visit_order_dynamic,
+    resolve_order_group,
+)
+from repro.models import build_model
+from repro.obs import Registry
+from repro.obs.autotune import (
+    canonicalize_key,
+    load_autotune_cache,
+    lookup_order_winner,
+    normalize_autotune_key,
+)
+from repro.serve import ORDER_INDEX, OrderAdaptController, Request, ServeEngine
+from repro.serve.adapt import DEFAULT_SNAKE_GROUP
+
+
+@pytest.fixture(scope="module")
+def deepseek():
+    cfg = get_config("deepseek-7b").reduced()
+    lm = build_model(cfg)
+    return cfg, lm, lm.init(jax.random.PRNGKey(0))
+
+
+# ---- dynamic visit order == static schedule ---------------------------------
+
+
+@pytest.mark.parametrize("order,group", [
+    ("cyclic", None), ("sawtooth", None),
+    ("block_snake", 1), ("block_snake", 2), ("block_snake", 3),
+    ("block_snake", 4), ("block_snake", 7),
+])
+@pytest.mark.parametrize("n_kv", [1, 2, 5, 8, 13])
+def test_dynamic_visit_order_matches_static(order, group, n_kv):
+    parity = np.arange(2 * n_kv + 3, dtype=np.int32)
+    sched = KVSchedule(order, n_q=1, n_kv=n_kv, causal=False, q_block=1,
+                      kv_block=1, snake_group=group)
+    static = np.asarray(sched.page_order(parity))
+    g = resolve_order_group(order, group, n_kv)
+    dynamic = np.asarray(page_visit_order_dynamic(parity, n_kv, g))
+    np.testing.assert_array_equal(static, dynamic)
+
+
+def test_dynamic_visit_order_group_is_traceable():
+    # The whole point of the operand design: group can be a traced scalar.
+    fn = jax.jit(lambda p, g: page_visit_order_dynamic(p, 8, g))
+    a = np.asarray(fn(np.arange(4, dtype=np.int32), np.int32(1)))
+    b = np.asarray(fn(np.arange(4, dtype=np.int32), np.int32(8)))
+    assert fn._cache_size() == 1  # same trace, both groups
+    np.testing.assert_array_equal(a[1], np.arange(8))  # group 1 == cyclic
+    np.testing.assert_array_equal(b[1], np.arange(8)[::-1])  # n == sawtooth
+
+
+# ---- controller decision logic ----------------------------------------------
+
+
+def _ctl(**kw):
+    kw.setdefault("order", "cyclic")
+    return OrderAdaptController(Registry(), **kw)
+
+
+def test_consider_requires_sustained_improvement():
+    ctl = _ctl(hysteresis=0.10, confirm=2)
+    worse = {"cyclic": 100.0, "sawtooth": 95.0, "block_snake": 98.0}
+    better = {"cyclic": 100.0, "sawtooth": 80.0, "block_snake": 98.0}
+    assert not ctl.consider(worse)  # 5% < 10% threshold
+    assert not ctl.consider(better)  # first qualifying sample: pending only
+    assert ctl.order is Order.CYCLIC
+    assert ctl.consider(better)  # second consecutive: switch
+    assert ctl.order is Order.SAWTOOTH
+    assert ctl.switches == 1
+
+
+def test_consider_resets_on_candidate_change_and_dropout():
+    ctl = _ctl(hysteresis=0.05, confirm=2)
+    saw = {"cyclic": 100.0, "sawtooth": 80.0, "block_snake": 99.0}
+    snake = {"cyclic": 100.0, "sawtooth": 99.0, "block_snake": 80.0}
+    tie = {"cyclic": 100.0, "sawtooth": 100.0, "block_snake": 100.0}
+    assert not ctl.consider(saw)
+    assert not ctl.consider(snake)  # candidate changed: count restarts
+    assert not ctl.consider(tie)    # below threshold: pending cleared
+    assert not ctl.consider(snake)  # back to 1 of 2
+    assert ctl.consider(snake)
+    assert ctl.order is Order.BLOCK_SNAKE
+
+
+def test_consider_handles_empty_and_missing_current():
+    ctl = _ctl(confirm=1)
+    assert not ctl.consider(None)
+    assert not ctl.consider({})
+    assert not ctl.consider({"sawtooth": 1.0})  # current order not modeled
+    assert ctl.switches == 0
+
+
+def test_metrics_surface_and_switch_to():
+    reg = Registry()
+    ctl = OrderAdaptController(reg, order="sawtooth", enabled=False)
+    # Both series exist immediately, even disabled (CI schema relies on it).
+    assert reg.value("serve.order_switches") == 0
+    assert reg.value("serve.current_order") == ORDER_INDEX[Order.SAWTOOTH]
+    ctl.switch_to("block_snake")
+    assert reg.value("serve.order_switches") == 1
+    assert reg.value("serve.current_order") == ORDER_INDEX[Order.BLOCK_SNAKE]
+    assert ctl.effective_snake_group == DEFAULT_SNAKE_GROUP
+    assert ctl.effective_group(8) == min(DEFAULT_SNAKE_GROUP, 8)
+
+
+class _FakeSampler:
+    def __init__(self, fwd_miss):
+        self.fwd_miss = fwd_miss
+        self.current_order = "cyclic"
+        self.history = [{"current_order": "cyclic", "fwd_miss": fwd_miss}]
+        self.calls = 0
+
+    def sample(self, pool):
+        self.calls += 1
+        self.history.append(
+            {"current_order": self.current_order, "fwd_miss": self.fwd_miss}
+        )
+        return True
+
+    @property
+    def last_fwd_miss(self):
+        return self.history[-1]["fwd_miss"]
+
+
+def test_maybe_adapt_epoch_gating_and_history_rewrite():
+    ctl = _ctl(epoch=4, hysteresis=0.05, confirm=1)
+    smp = _FakeSampler({"cyclic": 100.0, "sawtooth": 50.0, "block_snake": 99.0})
+    assert not ctl.maybe_adapt(3, pool=None, sampler=smp)  # off-epoch
+    assert smp.calls == 0
+    assert ctl.maybe_adapt(4, pool=None, sampler=smp)
+    assert smp.calls == 1
+    # The triggering sample is re-attributed to the order driving the next
+    # steps — the accounting convention the serve bench integrates with.
+    assert smp.history[-1]["current_order"] == "sawtooth"
+    assert smp.current_order == "sawtooth"
+    disabled = _ctl(epoch=4, enabled=False)
+    assert not disabled.maybe_adapt(4, pool=None, sampler=smp)
+    assert smp.calls == 1
+
+
+# ---- autotune cache: keys, load, lookup -------------------------------------
+
+
+def test_canonicalize_key_normalizes_and_sorts():
+    key = canonicalize_key({"b": np.int64(3), "a": 1.0000004, "c": "CPU"})
+    assert list(key) == ["a", "b", "c"]
+    assert key == {"a": 1.0, "b": 3, "c": "CPU"}
+    assert isinstance(key["b"], int)
+    with pytest.raises(TypeError):
+        canonicalize_key({"flag": True})
+    # Writer-order independence is the whole point of the shared helper.
+    assert normalize_autotune_key("order_sweep", {"x": 1, "y": 2.0}) == (
+        normalize_autotune_key("order_sweep", {"y": 2, "x": 1})
+    )
+
+
+def _write_cache(path, rows):
+    with open(path, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+
+
+def _rec(seq, order, *, snake_group=None, version=1, arch="deepseek-7b",
+         capacity_mib=3.0, backend="cpu", **extra):
+    return {
+        "schema_version": version,
+        "kind": "order_sweep",
+        "key": {"arch": arch, "seq_bucket": seq, "capacity_mib": capacity_mib,
+                "n_workers": 12, "backend": backend},
+        "winner": {"order": order, "snake_group": snake_group},
+        **extra,
+    }
+
+
+def test_load_autotune_cache_missing_dedup_and_unknown_schema(tmp_path):
+    assert load_autotune_cache(tmp_path / "nope.jsonl") == []
+    p = tmp_path / "cache.jsonl"
+    _write_cache(p, [
+        _rec(8192, "sawtooth"),
+        _rec(16384, "block_snake", snake_group=16),
+        _rec(8192, "cyclic"),  # same key, later line: last writer wins
+    ])
+    entries = load_autotune_cache(p)
+    assert len(entries) == 2
+    by_seq = {e["key"]["seq_bucket"]: e["winner"]["order"] for e in entries}
+    assert by_seq == {8192: "cyclic", 16384: "block_snake"}
+
+    _write_cache(p, [_rec(8192, "cyclic"), _rec(4096, "sawtooth", version=99)])
+    with pytest.warns(UserWarning, match="schema_version"):
+        entries = load_autotune_cache(p)
+    assert [e["key"]["seq_bucket"] for e in entries] == [8192]
+
+
+def test_lookup_order_winner_nearest_bucket(tmp_path):
+    p = tmp_path / "cache.jsonl"
+    _write_cache(p, [
+        _rec(8192, "cyclic"),
+        _rec(16384, "block_snake", snake_group=16),
+        _rec(8192, "sawtooth", arch="other-arch"),
+    ])
+    entries = load_autotune_cache(p)
+    # 256 is log-nearer 8192 than 16384; arch match is mandatory.
+    hit = lookup_order_winner(entries, arch="deepseek-7b", seq_bucket=256,
+                              capacity_mib=3.0, backend="cpu")
+    assert hit["winner"]["order"] == "cyclic"
+    hit = lookup_order_winner(entries, arch="deepseek-7b", seq_bucket=20000,
+                              capacity_mib=3.0)
+    assert hit["winner"]["order"] == "block_snake"
+    assert lookup_order_winner(entries, arch="missing", seq_bucket=256,
+                               capacity_mib=3.0) is None
+
+
+def test_seed_from_cache(tmp_path):
+    p = tmp_path / "cache.jsonl"
+    _write_cache(p, [_rec(16384, "block_snake", snake_group=16),
+                     _rec(8192, "cyclic")])
+    ctl = _ctl(order="sawtooth", snake_group=4)
+    assert ctl.seed_from_cache(p, arch="deepseek-7b", seq_bucket=16000,
+                               capacity_mib=3.0, backend="cpu")
+    assert ctl.order is Order.BLOCK_SNAKE
+    assert ctl.snake_group == 16  # winner's group replaces the configured one
+    assert ctl.seeded_from["key"]["seq_bucket"] == 16384
+    # Missing file: keep the configured order, report no seed.
+    ctl2 = _ctl(order="sawtooth")
+    assert not ctl2.seed_from_cache(tmp_path / "nope.jsonl",
+                                    arch="deepseek-7b", seq_bucket=256,
+                                    capacity_mib=3.0)
+    assert ctl2.order is Order.SAWTOOTH and ctl2.seeded_from is None
+
+
+# ---- engine integration: switch mid-stream, bitwise parity, no recompile ----
+
+
+def _requests(vocab, n=3, max_new=10):
+    rng = np.random.default_rng(11)
+    return [
+        Request(tokens=rng.integers(2, vocab, size=int(rng.integers(5, 14)))
+                .astype(np.int32), max_new_tokens=max_new, rid=i)
+        for i in range(n)
+    ]
+
+
+def _stream(cfg, lm, params, order, *, force_switch_to=None, switch_at=4):
+    eng = ServeEngine(
+        build_model(cfg.with_(attn_order=order, snake_group=4)), params,
+        batch_size=3, max_len=64, scheduler="continuous", page_size=8,
+        prefill_chunk=16, llc_every=0,
+    )
+    if force_switch_to is not None:
+        ctl = eng.order_ctl
+        ctl.enabled = True
+
+        def forced(step_epoch, pool, sampler):
+            if step_epoch == switch_at and ctl.switches == 0:
+                ctl.switch_to(force_switch_to)
+                return True
+            return False
+
+        ctl.maybe_adapt = forced
+    res = eng.generate(_requests(cfg.vocab))
+    return eng, [r.tokens.tolist() for r in res]
+
+
+def test_forced_switch_token_parity_and_no_recompile(deepseek):
+    cfg, lm, params = deepseek
+    _, tok_c = _stream(cfg, lm, params, "cyclic")
+    _, tok_s = _stream(cfg, lm, params, "sawtooth")
+    eng, tok_x = _stream(cfg, lm, params, "cyclic",
+                         force_switch_to="sawtooth")
+    # Online softmax is traversal-order invariant: pinned orders agree, and
+    # a mid-stream switch cannot perturb a single token.
+    assert tok_c == tok_s == tok_x
+    assert eng.order_ctl.switches == 1
+    assert eng.order_ctl.order is Order.SAWTOOTH
+    # The operand design's contract: both step widths were compiled before
+    # the switch, and the switch added nothing.
+    assert eng.compiled_step_count() == 2
+    assert eng.obs.value("serve.order_switches") == 1
+    assert eng.obs.value("serve.current_order") == ORDER_INDEX[Order.SAWTOOTH]
+
+
+def test_block_snake_switch_token_parity(deepseek):
+    cfg, lm, params = deepseek
+    _, tok_b = _stream(cfg, lm, params, "block_snake")
+    eng, tok_x = _stream(cfg, lm, params, "sawtooth",
+                         force_switch_to="block_snake", switch_at=2)
+    assert tok_b == tok_x
+    assert eng.compiled_step_count() == 2
