@@ -14,6 +14,8 @@ Checks:
   ``repro.obs.export.SCHEMA_VERSION``) and a kind/name/labels triple;
   required series exist: TTFT/TPOT histograms, per-kind token counters
   (decode AND prefill), pool occupancy + prefix-sharing gauges/counters,
+  the resilience counters (preemptions / restore tokens / shed /
+  deadline misses / cancels) and admission-paused gauge,
   and ``llc.modeled_miss_bytes`` gauges for >= 2 distinct traversal orders;
   histogram lines carry consistent buckets (cumulative, ending at +Inf,
   count == last cumulative).
@@ -38,6 +40,14 @@ REQUIRED_COUNTER_SERIES = (
     ("pool.pages_adopted", {}),
     ("pool.cow_forks", {}),
     ("serve.order_switches", {}),
+    # Resilience counters (DESIGN.md §12): pre-created at engine start so
+    # they exist (at 0) even on a run with no pressure — the schema can
+    # require them unconditionally.
+    ("serve.preemptions", {}),
+    ("serve.restore_tokens", {}),
+    ("serve.shed", {}),
+    ("serve.deadline_miss", {}),
+    ("serve.cancelled", {}),
 )
 REQUIRED_GAUGES = (
     "pool.occupancy_frac",
@@ -46,6 +56,7 @@ REQUIRED_GAUGES = (
     "serve.queue_depth",
     "serve.budget_utilization",
     "serve.current_order",
+    "serve.admission_paused",
     "llc.footprint_bytes",
 )
 MIN_LLC_ORDERS = 2

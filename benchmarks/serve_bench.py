@@ -21,6 +21,17 @@ Two request streams through the ServeEngine on CPU:
   output, no wall clock) and asserted: adaptive must match the best fixed
   order on both halves, beat the worse fixed order end-to-end, and switch
   without a single step recompile.
+* ``overload`` — the resilience layer (DESIGN.md §12) under a pool sized
+  to half the batch's worst case (2x oversubscription). Three parts, all
+  asserted: optimistic admission must preempt, restore, and still produce
+  bitwise the reserve engine's greedy tokens; a deadline/load-shed burst
+  must resolve every request with a typed status and positive goodput;
+  and a seeded chaos ``FaultPlan`` (injected pool exhaustion + a transient
+  device-step failure + a mid-prefill cancel) must finish with zero
+  uncaught exceptions, exactly one step retry, and clean pool invariants.
+
+``--scenario`` picks one scenario (CI's chaos smoke runs
+``--quick --scenario overload``); the default runs them all.
 
 Per scheduler/scenario the report carries tokens/s plus TTFT and TPOT
 p50/p95 (per-request wall-clock, captured by the engine), and the
@@ -276,6 +287,152 @@ def order_adaptation_scenario(jax, np, *, arch: str, params) -> dict:
     return out
 
 
+def overload_scenario(jax, np, *, lm, params, vocab, quick: bool) -> dict:
+    """Resilience under 2x pool oversubscription (DESIGN.md §12).
+
+    The pool is sized to half the batch's concurrent worst case
+    (``batch * pages_for(prompt + max_new) // 2``), the one knob that makes
+    mid-flight exhaustion *reachable* — the default pool guarantees every
+    slot its full capacity, so optimistic admission would never preempt.
+
+    Part A (parity): the same greedy stream through a reserve engine (never
+    preempts — the bitwise reference) and an optimistic one that must hit
+    ``PoolExhausted``, pick victims, and restore them by chunked
+    re-prefill. Asserted: >= 1 preemption, every request ``ok``, tokens
+    bitwise-identical to reserve, and the restore traffic re-used the two
+    existing compiled step widths (no third compile).
+
+    Part B (goodput): a burst with two impossible deadlines and a bounded
+    queue (``max_queue``). Asserted: both deadlines missed, the over-bound
+    tail shed, everything else served ``ok`` — typed statuses, no raise.
+    Goodput is ok-tokens/s against the offered token load.
+
+    Part C (chaos): a seeded ``FaultPlan`` injects a pool exhaustion at
+    step 2, a transient device-step failure at step 4 (retried once), and
+    a cancel of rid 2 at step 1 — mid-prefill, since its 48-token prompt
+    is still chunking through a 32-token prefill budget. Asserted: every
+    fault fired, exactly one step retry, rid 2 ``cancelled``, surviving
+    rows bitwise equal to the reserve reference, pool invariants clean.
+    """
+    from repro.serve import REQUEST_STATUSES, FaultPlan, Request, ServeEngine
+
+    page, max_len, chunk, batch, prompt_len = 16, 128, 32, 4, 48
+    n_req, max_new = (8, 24) if quick else (11, 40)
+    pages_per_req = -(-(prompt_len + max_new) // page)
+    pool = batch * pages_per_req // 2  # 2x oversubscribed worst case
+
+    def make(n=n_req, deadline=None):
+        rng = np.random.default_rng(3)
+        return [
+            Request(
+                tokens=rng.integers(2, vocab, size=prompt_len).astype(np.int32),
+                max_new_tokens=max_new,
+                rid=i,
+                deadline_s=deadline(i) if deadline else None,
+            )
+            for i in range(n)
+        ]
+
+    def engine(**kw):
+        return ServeEngine(
+            lm, params, batch_size=batch, max_len=max_len,
+            scheduler="continuous", page_size=page, prefill_chunk=chunk,
+            pool_pages=pool, **kw,
+        )
+
+    def statuses(res):
+        by = {}
+        for r in res:
+            assert r.status in REQUEST_STATUSES, r.status
+            by[r.status] = by.get(r.status, 0) + 1
+        return by
+
+    # -- A: preempt/restore bitwise parity under natural exhaustion -------
+    ref = engine()
+    res_ref = ref.generate(make())
+    opt = engine(admission="optimistic", max_preemptions=10)
+    t0 = time.time()
+    res_opt = opt.generate(make())
+    opt_s = time.time() - t0
+    st = opt.last_stats
+    assert st.preemptions >= 1, "oversubscribed pool never exhausted"
+    assert all(r.status == "ok" for r in res_ref + res_opt)
+    for a, b in zip(res_ref, res_opt):
+        assert (a.tokens == b.tokens).all(), f"rid {a.rid} diverged"
+    assert opt.compiled_step_count() == 2, "restore added a compile"
+    parity = {
+        "preemptions": st.preemptions,
+        "restore_tokens": st.restore_tokens,
+        "mixed_steps_reserve": ref.last_stats.mixed_steps,
+        "mixed_steps_optimistic": st.mixed_steps,
+        "token_parity": True,
+        "compiled_steps": opt.compiled_step_count(),
+    }
+
+    # -- B: goodput under deadlines + bounded-queue load shedding ---------
+    n_burst = n_req + 4
+    eng = engine(admission="optimistic", max_preemptions=10, max_queue=3)
+    reqs = make(n_burst, deadline=lambda i: 0.0 if i < 2 else 60.0)
+    t0 = time.time()
+    res = eng.generate(reqs)
+    dt = time.time() - t0
+    by = statuses(res)
+    sb = eng.last_stats
+    assert by.get("deadline", 0) == 2, by
+    assert by.get("shed", 0) >= 1, by
+    assert by.get("failed", 0) == 0 and by.get("cancelled", 0) == 0, by
+    ok_tokens = sum(r.steps for r in res if r.status == "ok")
+    offered = n_burst * max_new
+    goodput = {
+        "requests": n_burst,
+        "max_queue": 3,
+        "statuses": by,
+        "offered_tokens": offered,
+        "ok_tokens": ok_tokens,
+        "goodput_tok_per_s": round(ok_tokens / dt, 2) if dt > 0 else 0.0,
+        "goodput_token_frac": round(ok_tokens / offered, 3),
+        "preemptions": sb.preemptions,
+    }
+    assert goodput["goodput_tok_per_s"] > 0
+
+    # -- C: seeded chaos plan through the fault hooks ---------------------
+    plan = FaultPlan(seed=0).exhaust_pool(2).fail_device_step(4).cancel(1, rid=2)
+    eng = engine(admission="optimistic", max_preemptions=10, faults=plan)
+    res = eng.generate(make())
+    by = statuses(res)
+    v = eng.obs.value
+    assert plan.exhausted, [f.site for f in plan.faults if f.times > 0]
+    assert v("serve.step_retries") == 1, "transient failure not retried once"
+    assert by.get("cancelled", 0) == 1 and res[2].status == "cancelled", by
+    for a, b in zip(res_ref, res):
+        if b.status == "ok":
+            assert (a.tokens == b.tokens).all(), f"rid {a.rid} diverged"
+    eng.last_pool.check_invariants()
+    chaos = {
+        "plan": [dict(f) for f in plan.fired],
+        "statuses": by,
+        "step_retries": 1,
+        "preemptions": eng.last_stats.preemptions,
+        "survivor_token_parity": True,
+        "invariants_ok": True,
+    }
+
+    return {
+        "page_size": page,
+        "max_len": max_len,
+        "prefill_chunk": chunk,
+        "batch_size": batch,
+        "prompt_len": prompt_len,
+        "max_new": max_new,
+        "pool_pages": pool,
+        "oversubscription": round(batch * pages_per_req / pool, 2),
+        "parity": parity,
+        "goodput": goodput,
+        "chaos": chaos,
+        "optimistic_seconds": round(opt_s, 4),
+    }
+
+
 def _pct(xs, p):
     xs = sorted(xs)
     if not xs:
@@ -312,9 +469,11 @@ def time_engine(eng, make_requests, repeats: int = 5) -> dict:
         if best is None or dt < best:
             best, results = dt, res
         # Latency percentiles pool every repeat's requests — a p95 from one
-        # short run is a max(), far too noisy for a CI trend line.
-        ttfts += [r.ttft_s for r in res]
-        tpots += [r.tpot_s for r in res if r.steps > 1]
+        # short run is a max(), far too noisy for a CI trend line. Only
+        # status=ok rows carry meaningful latencies (shed/deadline/failed
+        # requests resolve without observing TTFT/TPOT).
+        ttfts += [r.ttft_s for r in res if r.status == "ok"]
+        tpots += [r.tpot_s for r in res if r.status == "ok" and r.steps > 1]
     tokens = sum(r.steps for r in results)
     out = {
         "requests": len(results),
@@ -358,8 +517,16 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--scenario", default="all",
+                    choices=["all", "mixed", "shared_prefix",
+                             "order_adaptation", "overload"],
+                    help="run one scenario (CI chaos smoke: --quick "
+                         "--scenario overload); default runs them all")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
+
+    def on(name):
+        return args.scenario in ("all", name)
 
     cfg = get_config(args.arch).reduced()
     lm = build_model(cfg)
@@ -387,116 +554,153 @@ def main() -> None:
         "max_len": args.max_len,
         "page_size": args.page_size,
         "prefill_chunk": args.prefill_chunk,
-        "static": time_engine(engine("static"), make),
-        "continuous": time_engine(
+    }
+    if on("mixed"):
+        report["static"] = time_engine(engine("static"), make)
+        report["continuous"] = time_engine(
             engine("continuous", prefill_chunk=args.prefill_chunk), make
-        ),
-    }
-    report["speedup"] = round(
-        report["continuous"]["tok_per_s"] / report["static"]["tok_per_s"], 3
-    )
-
-    # Shared-system-prompt scenario: continuous engine with prefix sharing
-    # on vs off (the A/B is apples-to-apples — same mixed step, same
-    # budget; only the pool's page dedup differs).
-    n_req, prefix_len, max_new = (8, 48, 8) if args.quick else (12, 64, 12)
-    make_shared = lambda: build_shared_prefix_requests(
-        np, cfg.vocab, n_requests=n_req, prefix_len=prefix_len, tail_max=8,
-        max_new=max_new,
-    )
-    eng_shared = engine("continuous", prefill_chunk=args.prefill_chunk)
-    shared = time_engine(eng_shared, make_shared)
-    eng_unshared = engine(
-        "continuous", prefill_chunk=args.prefill_chunk, prefix_sharing=False
-    )
-    unshared = time_engine(eng_unshared, make_shared)
-    report["shared_prefix"] = {
-        "n_requests": n_req,
-        "prefix_len": prefix_len,
-        "sharing_on": shared,
-        "sharing_off": unshared,
-        "ttft_p95_improvement": round(
-            unshared["ttft_p95_s"] / max(shared["ttft_p95_s"], 1e-9), 3
-        ),
-        "tok_per_s_improvement": round(
-            shared["tok_per_s"] / max(unshared["tok_per_s"], 1e-9), 3
-        ),
-        # Deterministic (wall-clock-free) trend metrics: sharing must strictly
-        # reduce the wide (chunk-prefill) step count on this stream.
-        "wide_steps_saved": unshared["wide_steps"] - shared["wide_steps"],
-    }
-
-    # Flip-boundary adaptive-serving scenario: pinned cyclic / block_snake
-    # vs the online order-adaptation controller on a footprint-growing
-    # stream (deterministic modeled-byte accounting; asserts adaptive ≥
-    # best fixed on both halves and zero recompiles across the switch).
-    report["order_adaptation"] = order_adaptation_scenario(
-        jax, np, arch=args.arch, params=params
-    )
-
-    # Page-locality twins of the serving decode loop (cache_sim):
-    # per-row traversal order, and cross-row reuse of a deduplicated prefix.
-    lens = [24] * n_long + [96] * 1
-    report["page_trace"] = {
-        order: simulate_paged_decode(order, lens, max_new_long, args.page_size)
-        for order in ("cyclic", "sawtooth")
-    }
-    report["shared_page_trace"] = {
-        f"{order}_{'shared' if sh else 'private'}": simulate_shared_prefix_decode(
-            order,
-            args.batch_size,
-            prefix_len // args.page_size,
-            [8] * args.batch_size,
-            max_new,
-            args.page_size,
-            shared=sh,
         )
-        for order in ("cyclic", "sawtooth")
-        for sh in (True, False)
-    }
+        report["speedup"] = round(
+            report["continuous"]["tok_per_s"] / report["static"]["tok_per_s"], 3
+        )
+        # Page-locality twin of the mixed decode loop (cache_sim).
+        lens = [24] * n_long + [96] * 1
+        report["page_trace"] = {
+            order: simulate_paged_decode(
+                order, lens, max_new_long, args.page_size
+            )
+            for order in ("cyclic", "sawtooth")
+        }
+
+    if on("shared_prefix"):
+        # Shared-system-prompt scenario: continuous engine with prefix
+        # sharing on vs off (the A/B is apples-to-apples — same mixed step,
+        # same budget; only the pool's page dedup differs).
+        n_req, prefix_len, max_new = (8, 48, 8) if args.quick else (12, 64, 12)
+        make_shared = lambda: build_shared_prefix_requests(
+            np, cfg.vocab, n_requests=n_req, prefix_len=prefix_len, tail_max=8,
+            max_new=max_new,
+        )
+        eng_shared = engine("continuous", prefill_chunk=args.prefill_chunk)
+        shared = time_engine(eng_shared, make_shared)
+        eng_unshared = engine(
+            "continuous", prefill_chunk=args.prefill_chunk, prefix_sharing=False
+        )
+        unshared = time_engine(eng_unshared, make_shared)
+        report["shared_prefix"] = {
+            "n_requests": n_req,
+            "prefix_len": prefix_len,
+            "sharing_on": shared,
+            "sharing_off": unshared,
+            "ttft_p95_improvement": round(
+                unshared["ttft_p95_s"] / max(shared["ttft_p95_s"], 1e-9), 3
+            ),
+            "tok_per_s_improvement": round(
+                shared["tok_per_s"] / max(unshared["tok_per_s"], 1e-9), 3
+            ),
+            # Deterministic (wall-clock-free) trend metrics: sharing must
+            # strictly reduce the wide (chunk-prefill) step count.
+            "wide_steps_saved": unshared["wide_steps"] - shared["wide_steps"],
+        }
+        # Cross-row reuse of a deduplicated prefix (cache_sim twin).
+        report["shared_page_trace"] = {
+            f"{order}_{'shared' if sh else 'private'}":
+                simulate_shared_prefix_decode(
+                    order,
+                    args.batch_size,
+                    prefix_len // args.page_size,
+                    [8] * args.batch_size,
+                    max_new,
+                    args.page_size,
+                    shared=sh,
+                )
+            for order in ("cyclic", "sawtooth")
+            for sh in (True, False)
+        }
+
+    if on("order_adaptation"):
+        # Flip-boundary adaptive-serving scenario: pinned cyclic /
+        # block_snake vs the online order-adaptation controller on a
+        # footprint-growing stream (deterministic modeled-byte accounting;
+        # asserts adaptive ≥ best fixed on both halves, zero recompiles).
+        report["order_adaptation"] = order_adaptation_scenario(
+            jax, np, arch=args.arch, params=params
+        )
+
+    if on("overload"):
+        # Resilience layer under 2x pool oversubscription: preempt/restore
+        # parity, deadline/shed goodput, seeded chaos faults (all asserted).
+        report["overload"] = overload_scenario(
+            jax, np, lm=lm, params=params, vocab=cfg.vocab, quick=args.quick
+        )
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    for name in ("static", "continuous"):
-        r = report[name]
+    if on("mixed"):
+        for name in ("static", "continuous"):
+            r = report[name]
+            print(
+                f"{name:11s} {r['tokens']:4d} tokens in {r['seconds']:.2f}s "
+                f"-> {r['tok_per_s']:.1f} tok/s  ttft p50/p95 "
+                f"{r['ttft_p50_s']*1e3:.0f}/{r['ttft_p95_s']*1e3:.0f} ms"
+            )
+    if on("shared_prefix"):
+        sp = report["shared_prefix"]
         print(
-            f"{name:11s} {r['tokens']:4d} tokens in {r['seconds']:.2f}s "
-            f"-> {r['tok_per_s']:.1f} tok/s  "
-            f"ttft p50/p95 {r['ttft_p50_s']*1e3:.0f}/{r['ttft_p95_s']*1e3:.0f} ms"
+            f"shared-prefix: {sp['sharing_on']['pages_adopted']} pages "
+            f"({sp['sharing_on']['prompt_tokens_adopted']} tokens) adopted, "
+            f"{sp['sharing_on']['cow_forks']} CoW forks, "
+            f"{sp['wide_steps_saved']} wide steps saved; ttft p95 "
+            f"{sp['sharing_off']['ttft_p95_s']*1e3:.0f} -> "
+            f"{sp['sharing_on']['ttft_p95_s']*1e3:.0f} ms "
+            f"({sp['ttft_p95_improvement']}x)"
         )
-    sp = report["shared_prefix"]
-    print(
-        f"shared-prefix: {sp['sharing_on']['pages_adopted']} pages "
-        f"({sp['sharing_on']['prompt_tokens_adopted']} tokens) adopted, "
-        f"{sp['sharing_on']['cow_forks']} CoW forks, "
-        f"{sp['wide_steps_saved']} wide steps saved; ttft p95 "
-        f"{sp['sharing_off']['ttft_p95_s']*1e3:.0f} -> "
-        f"{sp['sharing_on']['ttft_p95_s']*1e3:.0f} ms "
-        f"({sp['ttft_p95_improvement']}x)"
-    )
-    oa = report["order_adaptation"]
-    m = oa["modeled_mib"]
-    print(
-        f"order-adapt: seeded {oa['seeded_order']} -> {oa['final_order']} "
-        f"({oa['order_switches']} switch at sample {oa['flip_sample']}/"
-        f"{oa['samples']}, {oa['flip_footprint_pages']} pages); modeled MiB "
-        f"pre/post flip: adaptive {m['adaptive']['pre_flip_mib']:.2f}/"
-        f"{m['adaptive']['post_flip_mib']:.2f}, cyclic "
-        f"{m['cyclic']['pre_flip_mib']:.2f}/{m['cyclic']['post_flip_mib']:.2f}, "
-        f"block_snake {m['block_snake']['pre_flip_mib']:.2f}/"
-        f"{m['block_snake']['post_flip_mib']:.2f}; "
-        f"compiled steps {oa['compiled_steps']} (no recompile)"
-    )
-    pt = report["page_trace"]
-    st = report["shared_page_trace"]
-    print(
-        f"speedup {report['speedup']}x; page reuse distance "
-        f"cyclic {pt['cyclic']['mean_reuse_distance']:.1f} -> "
-        f"sawtooth {pt['sawtooth']['mean_reuse_distance']:.1f}; "
-        f"shared-prefix reuse distance private "
-        f"{st['sawtooth_private']['mean_reuse_distance']:.1f} -> shared "
-        f"{st['sawtooth_shared']['mean_reuse_distance']:.1f}"
-    )
+    if on("order_adaptation"):
+        oa = report["order_adaptation"]
+        m = oa["modeled_mib"]
+        print(
+            f"order-adapt: seeded {oa['seeded_order']} -> {oa['final_order']} "
+            f"({oa['order_switches']} switch at sample {oa['flip_sample']}/"
+            f"{oa['samples']}, {oa['flip_footprint_pages']} pages); modeled "
+            f"MiB pre/post flip: adaptive {m['adaptive']['pre_flip_mib']:.2f}/"
+            f"{m['adaptive']['post_flip_mib']:.2f}, cyclic "
+            f"{m['cyclic']['pre_flip_mib']:.2f}/"
+            f"{m['cyclic']['post_flip_mib']:.2f}, "
+            f"block_snake {m['block_snake']['pre_flip_mib']:.2f}/"
+            f"{m['block_snake']['post_flip_mib']:.2f}; "
+            f"compiled steps {oa['compiled_steps']} (no recompile)"
+        )
+    if on("overload"):
+        ov = report["overload"]
+        pa, gp, ch = ov["parity"], ov["goodput"], ov["chaos"]
+        sts = ", ".join(f"{k}={v}" for k, v in sorted(gp["statuses"].items()))
+        print(
+            f"overload ({ov['oversubscription']}x oversubscribed, "
+            f"{ov['pool_pages']} pages): parity ok with "
+            f"{pa['preemptions']} preemptions "
+            f"({pa['restore_tokens']} tokens re-prefilled, compiled steps "
+            f"{pa['compiled_steps']}); goodput "
+            f"{gp['goodput_tok_per_s']:.1f} tok/s "
+            f"({gp['goodput_token_frac']:.0%} of offered; {sts}); chaos: "
+            f"{len(ch['plan'])} faults fired, {ch['step_retries']} step "
+            f"retry, statuses "
+            + ", ".join(f"{k}={v}" for k, v in sorted(ch["statuses"].items()))
+        )
+    if on("mixed"):
+        pt = report["page_trace"]
+        tail = ""
+        if on("shared_prefix"):
+            st = report["shared_page_trace"]
+            tail = (
+                f"; shared-prefix reuse distance private "
+                f"{st['sawtooth_private']['mean_reuse_distance']:.1f} -> "
+                f"shared {st['sawtooth_shared']['mean_reuse_distance']:.1f}"
+            )
+        print(
+            f"speedup {report['speedup']}x; page reuse distance "
+            f"cyclic {pt['cyclic']['mean_reuse_distance']:.1f} -> "
+            f"sawtooth {pt['sawtooth']['mean_reuse_distance']:.1f}" + tail
+        )
 
 
 if __name__ == "__main__":

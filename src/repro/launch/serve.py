@@ -22,6 +22,14 @@ hillclimb autotune cache (``--autotune-cache``) and then, every
 ``--adapt-epoch`` mixed steps, re-picks the order from the live modeled-LLC
 gauges (hysteresis via ``--adapt-hysteresis`` / ``--adapt-confirm``).
 Switches rebind the step's ``order_group`` operand — zero recompiles.
+
+Resilience (DESIGN.md §12): ``--admission optimistic`` oversubscribes the
+pool (mid-flight exhaustion is answered by victim preemption + chunked
+re-prefill restore, bounded by ``--max-preemptions``), ``--max-queue``
+load-sheds the newest arrived requests, ``--admit-watermark`` pauses
+admission under pool pressure, and ``--deadline-s`` gives every synthetic
+request a wall-clock deadline. Every request resolves with a typed
+``status`` (ok/deadline/cancelled/shed/failed) instead of raising.
 """
 
 from __future__ import annotations
@@ -96,6 +104,28 @@ def main():
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the paged pool's content-hash prefix "
                          "sharing / copy-on-write page dedup")
+    ap.add_argument("--admission", default="reserve",
+                    choices=["reserve", "optimistic"],
+                    help="pool admission discipline: 'reserve' guarantees "
+                         "the worst case up front; 'optimistic' reserves "
+                         "only prompts and answers mid-flight exhaustion "
+                         "with victim preemption + chunked re-prefill")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound on the arrived waiting queue; newest "
+                         "requests beyond it are load-shed (status=shed)")
+    ap.add_argument("--admit-watermark", type=float, default=None,
+                    help="pool-occupancy fraction at which admission "
+                         "pauses (default 0.9 optimistic / 1.0 reserve)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline from engine "
+                         "start; expired requests resolve status=deadline "
+                         "with their partial tokens")
+    ap.add_argument("--max-preemptions", type=int, default=2,
+                    help="preemption bound per request before it resolves "
+                         "status=failed")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="allocatable KV pool pages (default: every slot's "
+                         "worst case; smaller = oversubscribed pool)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="dump the obs metrics registry as JSONL here")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -153,6 +183,11 @@ def main():
         adapt_hysteresis=args.adapt_hysteresis,
         adapt_confirm=args.adapt_confirm,
         autotune_cache=args.autotune_cache,
+        admission=args.admission,
+        max_queue=args.max_queue,
+        admit_watermark=args.admit_watermark,
+        max_preemptions=args.max_preemptions,
+        pool_pages=args.pool_pages,
     )
     if adapt and eng.order_ctl is not None:
         src = eng.order_ctl.seeded_from
@@ -169,14 +204,21 @@ def main():
             max_new_tokens=args.max_new,
             temperature=args.temperature,
             rid=i,
+            deadline_s=args.deadline_s,
         )
         for i in range(args.requests)
     ]
     t0 = time.time()
     results = eng.generate(reqs)
     dt = time.time() - t0
+    ok = [r for r in results if r.status == "ok"]
     tok = sum(r.steps for r in results)
     print(f"served {len(results)} requests, {tok} tokens in {dt:.2f}s ({tok/dt:.1f} tok/s)")
+    if len(ok) < len(results):
+        by = {}
+        for r in results:
+            by[r.status] = by.get(r.status, 0) + 1
+        print("  statuses: " + ", ".join(f"{k}={v}" for k, v in sorted(by.items())))
     stats = eng.last_stats
     if stats is not None:
         print(
@@ -185,6 +227,13 @@ def main():
             f"({stats.prompt_tokens_adopted} tokens), "
             f"{stats.cow_forks} CoW forks"
         )
+        if stats.preemptions or stats.shed or stats.deadline_miss or stats.failed:
+            print(
+                f"  resilience: {stats.preemptions} preemptions "
+                f"({stats.restore_tokens} tokens re-prefilled), "
+                f"{stats.shed} shed, {stats.deadline_miss} deadline, "
+                f"{stats.cancelled} cancelled, {stats.failed} failed"
+            )
     for r in results[:4]:
         print(f"  rid={r.rid} -> {r.tokens.tolist()}")
 

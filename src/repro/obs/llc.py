@@ -167,25 +167,20 @@ class LLCSampler:
                 res.misses
             )
         reg.gauge("llc.best_order_index").set(fwd_miss.index(min(fwd_miss)))
-        # ``current_order`` here is the order in effect when the sample was
-        # taken; a controller that switches on this sample rewrites the
-        # entry so the history reflects the order driving the *next* steps.
-        self.history.append(
-            {
-                "sample": self.samples,
-                "max_len": fp["max_len"],
-                "footprint_bytes": fp["resident_bytes"],
-                "active_rows": fp["active_rows"],
-                "fwd_miss": dict(zip(self.orders, fwd_miss)),
-                "current_order": self.current_order,
-            }
-        )
-        if len(self.history) > self.history_cap:
-            del self.history[: -self.history_cap]
 
+        # Shared-prefix decode model: evaluated when the pool actually holds
+        # shared pages across >1 rows, and recorded into the history entry
+        # alongside the fwd reading (with the live shared-page fraction) so
+        # the order-adaptation controller can blend the two signals when
+        # sharing dominates the footprint (DESIGN.md §11 follow-up).
+        shared_miss: Optional[dict] = None
+        shared_frac = (
+            fp["shared_pages"] / fp["distinct_pages"] if fp["distinct_pages"] else 0.0
+        )
         if fp["shared_pages"] and fp["active_rows"] > 1:
             prefix_pages = max(1, fp["shared_pages"])
             own = max(self.page, fp["max_len"] - prefix_pages * self.page)
+            shared_miss = {}
             for order in self.orders:
                 res = shared_prefix_llc_model(
                     order,
@@ -202,9 +197,28 @@ class LLCSampler:
                         self.snake_group if order == "block_snake" else None
                     ),
                 )
+                shared_miss[order] = res.misses
                 reg.gauge(
                     "llc.modeled_miss_bytes", order=order, model="shared_prefix"
                 ).set(res.misses)
+
+        # ``current_order`` here is the order in effect when the sample was
+        # taken; a controller that switches on this sample rewrites the
+        # entry so the history reflects the order driving the *next* steps.
+        self.history.append(
+            {
+                "sample": self.samples,
+                "max_len": fp["max_len"],
+                "footprint_bytes": fp["resident_bytes"],
+                "active_rows": fp["active_rows"],
+                "fwd_miss": dict(zip(self.orders, fwd_miss)),
+                "shared_miss": shared_miss,
+                "shared_frac": shared_frac,
+                "current_order": self.current_order,
+            }
+        )
+        if len(self.history) > self.history_cap:
+            del self.history[: -self.history_cap]
 
         self.samples += 1
         reg.counter("llc.samples").inc()

@@ -1,26 +1,45 @@
 from repro.serve.adapt import ORDER_INDEX, OrderAdaptController
 from repro.serve.engine import (
     CONTINUOUS_FAMILIES,
+    REQUEST_STATUSES,
     GenerationResult,
     Request,
     ServeEngine,
     StepStats,
+    select_victim,
     supports_continuous,
 )
-from repro.serve.kv_pool import PagedKVPool, PagePool, assemble_cache_view
+from repro.serve.faults import FAULT_SITES, Fault, FaultPlan, StepFault
+from repro.serve.kv_pool import (
+    AdmissionError,
+    PagedKVPool,
+    PagePool,
+    PoolError,
+    PoolExhausted,
+    assemble_cache_view,
+)
 from repro.serve.scheduler import ContinuousScheduler, Slot, StepItem
 
 __all__ = [
     "ORDER_INDEX",
     "OrderAdaptController",
     "CONTINUOUS_FAMILIES",
+    "REQUEST_STATUSES",
     "GenerationResult",
     "Request",
     "ServeEngine",
     "StepStats",
+    "select_victim",
     "supports_continuous",
+    "FAULT_SITES",
+    "Fault",
+    "FaultPlan",
+    "StepFault",
+    "AdmissionError",
     "PagedKVPool",
     "PagePool",
+    "PoolError",
+    "PoolExhausted",
     "assemble_cache_view",
     "ContinuousScheduler",
     "Slot",

@@ -69,6 +69,7 @@ class OrderAdaptController:
         epoch: int = 8,
         hysteresis: float = 0.05,
         confirm: int = 2,
+        shared_threshold: float = 0.25,
         enabled: bool = True,
     ):
         self.registry = registry
@@ -77,6 +78,7 @@ class OrderAdaptController:
         self.epoch = int(epoch)
         self.hysteresis = float(hysteresis)
         self.confirm = max(1, int(confirm))
+        self.shared_threshold = float(shared_threshold)
         self.enabled = enabled
         self.switches = 0
         self.seeded_from: Optional[dict] = None
@@ -155,26 +157,42 @@ class OrderAdaptController:
             return False
         if not sampler.sample(pool):
             return False
-        switched = self.consider(sampler.last_fwd_miss)
+        entry = sampler.history[-1]
+        switched = self.consider(
+            sampler.last_fwd_miss,
+            shared_miss=entry.get("shared_miss"),
+            shared_frac=entry.get("shared_frac", 0.0),
+        )
         if switched:
             sampler.current_order = self.order.value
             sampler.history[-1]["current_order"] = self.order.value
         return switched
 
-    def consider(self, fwd_miss: Optional[dict]) -> bool:
+    def consider(
+        self,
+        fwd_miss: Optional[dict],
+        shared_miss: Optional[dict] = None,
+        shared_frac: float = 0.0,
+    ) -> bool:
         """Apply the hysteresis rule to one per-order modeled-miss reading.
 
-        Split from :meth:`maybe_adapt` so unit tests (and offline replays)
-        can drive the decision logic with synthetic readings — no pool or
-        sampler required.
+        The base reading is the fwd-wavefront model; when the live
+        shared-page fraction reaches ``shared_threshold``, the shared-prefix
+        decode model is blended in, weighted by that fraction — a pool
+        dominated by adopted prefix pages has cross-row reuse the fwd model
+        cannot see, and the two models can disagree on the argmin (the flip
+        the blend exists to catch). Split from :meth:`maybe_adapt` so unit
+        tests (and offline replays) can drive the decision logic with
+        synthetic readings — no pool or sampler required.
         """
         if not fwd_miss:
             return False
-        cur = fwd_miss.get(self.order.value)
+        blended = self.blend(fwd_miss, shared_miss, shared_frac)
+        cur = blended.get(self.order.value)
         if cur is None:
             return False
-        best_order = min(fwd_miss, key=fwd_miss.get)
-        best = fwd_miss[best_order]
+        best_order = min(blended, key=blended.get)
+        best = blended[best_order]
         improvement = (cur - best) / cur if cur > 0 else 0.0
         if best_order == self.order.value or improvement < self.hysteresis:
             self._pending, self._pending_count = None, 0
@@ -187,6 +205,26 @@ class OrderAdaptController:
             return False
         self.switch_to(best_order)
         return True
+
+    def blend(
+        self,
+        fwd_miss: dict,
+        shared_miss: Optional[dict],
+        shared_frac: float,
+    ) -> dict:
+        """Per-order decision signal: fwd model blended with the
+        shared-prefix model by the live shared-page fraction ``w`` —
+        ``(1-w)*fwd + w*shared`` — once that fraction reaches
+        ``shared_threshold``; below it (or with no shared reading) the fwd
+        reading passes through untouched. Orders the shared model did not
+        score fall back to their fwd value."""
+        if not shared_miss or shared_frac < self.shared_threshold:
+            return dict(fwd_miss)
+        w = min(max(shared_frac, 0.0), 1.0)
+        return {
+            o: (1.0 - w) * v + w * shared_miss.get(o, v)
+            for o, v in fwd_miss.items()
+        }
 
     def switch_to(self, order: "Order | str") -> None:
         """Unconditional switch (the hysteresis-approved tail of

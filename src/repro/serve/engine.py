@@ -55,7 +55,13 @@ from repro.models.model import LM, build_model
 from repro.obs import LLCSampler, Registry, Tracer
 from repro.obs.llc import DEFAULT_CAPACITY_BYTES
 from repro.serve.adapt import OrderAdaptController
-from repro.serve.kv_pool import PagedKVPool, assemble_cache_view
+from repro.serve.faults import FaultPlan
+from repro.serve.kv_pool import (
+    AdmissionError,
+    PagedKVPool,
+    PoolExhausted,
+    assemble_cache_view,
+)
 from repro.serve.scheduler import ContinuousScheduler
 
 __all__ = [
@@ -64,7 +70,9 @@ __all__ = [
     "StepStats",
     "ServeEngine",
     "CONTINUOUS_FAMILIES",
+    "REQUEST_STATUSES",
     "supports_continuous",
+    "select_victim",
 ]
 
 EOS = 1  # legacy default, kept for callers that import it; engines use cfg.eos_id
@@ -80,6 +88,9 @@ def supports_continuous(cfg: ModelConfig) -> bool:
     return cfg.family in CONTINUOUS_FAMILIES and cfg.window is None
 
 
+REQUEST_STATUSES = ("ok", "deadline", "cancelled", "shed", "failed")
+
+
 @dataclasses.dataclass
 class Request:
     tokens: np.ndarray            # prompt (1D int32)
@@ -91,6 +102,16 @@ class Request:
                                   # requests sample independently
     eos_id: Optional[int] = None  # overrides ModelConfig.eos_id
     arrival: int = 0              # step arrival time (continuous only)
+    deadline_s: Optional[float] = None
+                                  # wall-clock budget from engine start;
+                                  # checked at step boundaries — an expired
+                                  # request resolves with status="deadline"
+                                  # and whatever tokens it has
+    priority: int = 0             # preemption shield: LOWER is preempted
+                                  # first (admission order stays FIFO)
+    max_preemptions: Optional[int] = None
+                                  # per-request override of the engine's
+                                  # preemption bound before status="failed"
 
 
 @dataclasses.dataclass
@@ -102,6 +123,20 @@ class GenerationResult:
     tpot_s: float = 0.0           # mean wall time per token after the first;
                                   # NaN when <= 1 token was generated (there
                                   # is no "per token after the first" then)
+    status: str = "ok"            # one of REQUEST_STATUSES; every non-"ok"
+                                  # status still carries the partial tokens
+                                  # generated before the request was retired
+    n_preemptions: int = 0        # times this request was preempted+restored
+
+
+def select_victim(candidates) -> int:
+    """Preemption victim policy (DESIGN.md §12): pick from ``candidates``
+    — tuples ``(slot, priority, n_generated, shared_donor)`` — the slot
+    with the lowest priority, preferring non-donors (releasing a shared
+    donor frees fewer pages than it holds), then the fewest generated
+    tokens (cheapest chunked re-prefill on restore), slot index as the
+    deterministic tiebreak."""
+    return min(candidates, key=lambda c: (c[1], bool(c[3]), c[2], c[0]))[0]
 
 
 def _tpot(elapsed_after_first: float, n_tok: int) -> float:
@@ -128,6 +163,12 @@ class StepStats:
     pages_adopted: int = 0        # prefix pages adopted instead of computed
     prompt_tokens_adopted: int = 0
     cow_forks: int = 0
+    preemptions: int = 0          # victim slots evicted under pool pressure
+    restore_tokens: int = 0       # tokens re-prefilled by preempt restores
+    shed: int = 0                 # requests load-shed past --max-queue
+    deadline_miss: int = 0        # requests retired on an expired deadline
+    cancelled: int = 0            # requests retired by host-side cancel()
+    failed: int = 0               # requests failed (preemption bound / step)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -196,7 +237,14 @@ class ServeEngine:
         adapt_epoch: int = 8,
         adapt_hysteresis: float = 0.05,
         adapt_confirm: int = 2,
+        adapt_shared_threshold: float = 0.25,
         autotune_cache: Optional[str] = None,
+        admission: str = "reserve",
+        max_queue: Optional[int] = None,
+        admit_watermark: Optional[float] = None,
+        max_preemptions: int = 2,
+        pool_pages: Optional[int] = None,
+        faults: Optional[FaultPlan] = None,
     ):
         """Pass ``mesh`` (+ optional ParallelConfig) for sharded serving:
         params are placed on their TP/FSDP shardings and every step runs
@@ -233,9 +281,31 @@ class ServeEngine:
         nearest-bucket lookup before the first step. The traversal order is
         a traced operand of the mixed step (the ``order_group`` scalar), so
         switches never recompile; with adaptation off the same operand just
-        stays constant at the configured order."""
+        stays constant at the configured order.
+        ``adapt_shared_threshold`` is the live shared-page fraction above
+        which the controller blends the shared-prefix LLC model into the
+        decision (DESIGN.md §11 follow-up).
+
+        Resilience (DESIGN.md §12): ``admission="optimistic"`` reserves only
+        prompts and lets decode growth oversubscribe the pool — mid-flight
+        ``PoolExhausted`` is answered by preempting a victim slot
+        (``select_victim``) and restoring it later via chunked re-prefill,
+        at most ``max_preemptions`` times per request before it resolves
+        ``status="failed"``. ``max_queue`` bounds the arrived waiting queue
+        (newest beyond it are load-shed with ``status="shed"``);
+        ``admit_watermark`` pauses admission while pool occupancy is at or
+        above it (default 0.9 under optimistic admission, 1.0 — never —
+        under reserve) instead of thrashing admission against preemption.
+        ``pool_pages`` overrides the pool's allocatable page count below the
+        all-slots worst case — the oversubscription knob that makes real
+        (non-injected) pool pressure reachable. ``faults`` attaches a
+        deterministic ``serve.faults.FaultPlan`` driving the no-op injection
+        hooks; one transient device-step failure per step is retried once
+        before the step's rows fail."""
         if scheduler not in ("static", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
+        if admission not in ("reserve", "optimistic"):
+            raise AdmissionError(f"unknown admission discipline {admission!r}")
         if scheduler == "continuous":
             cfg = lm.cfg
             if not supports_continuous(cfg):
@@ -254,6 +324,17 @@ class ServeEngine:
         self.mesh = mesh
         self.eos = lm.cfg.eos_id
         self.prefix_sharing = prefix_sharing
+        self.admission = admission
+        self.max_queue = max_queue
+        self.max_preemptions = max_preemptions
+        self.pool_pages = pool_pages
+        self.faults = faults
+        self._watermark = (
+            admit_watermark
+            if admit_watermark is not None
+            else (0.9 if admission == "optimistic" else 1.0)
+        )
+        self._cancelled: set[int] = set()
         # Cache capacity model, shared by validation here and the budgeting
         # in _generate_batch: prefill writes bucket + prefix tokens (VLM
         # prepends prefix embeddings) and decode writes max_new - 1 more
@@ -308,6 +389,17 @@ class ServeEngine:
         self._m_queue = r.gauge("serve.queue_depth")
         self._m_active = r.gauge("serve.active_slots")
         self._m_budget = r.gauge("serve.budget_utilization")
+        # Resilience series (DESIGN.md §12) — created here, not lazily, so
+        # every engine exposes the full schema from step 0 (check_metrics.py
+        # requires them even on fault-free runs).
+        self._m_preempt = r.counter("serve.preemptions")
+        self._m_restore_tok = r.counter("serve.restore_tokens")
+        self._m_shed = r.counter("serve.shed")
+        self._m_deadline = r.counter("serve.deadline_miss")
+        self._m_cancel = r.counter("serve.cancelled")
+        self._m_failed = r.counter("serve.failed")
+        self._m_retries = r.counter("serve.step_retries")
+        self._m_admit_paused = r.gauge("serve.admission_paused")
         self.llc: Optional[LLCSampler] = None
         self.order_ctl: Optional[OrderAdaptController] = None
         if scheduler == "continuous":
@@ -329,6 +421,7 @@ class ServeEngine:
                 epoch=adapt_epoch,
                 hysteresis=adapt_hysteresis,
                 confirm=adapt_confirm,
+                shared_threshold=adapt_shared_threshold,
                 enabled=adapt_order,
             )
             if adapt_order and autotune_cache:
@@ -361,6 +454,15 @@ class ServeEngine:
         return (
             jax.set_mesh(self.mesh) if self.mesh is not None else contextlib.nullcontext()
         )
+
+    def cancel(self, rid: int) -> None:
+        """Host-side cancellation of request ``rid``: at the next step
+        boundary (continuous) / decode iteration (static) the request is
+        retired, its pages released, and it resolves with
+        ``status="cancelled"`` carrying whatever tokens it had produced.
+        Unknown rids are remembered — a request submitted later under a
+        pre-cancelled rid resolves immediately."""
+        self._cancelled.add(int(rid))
 
     def _eos_for(self, r: Request) -> int:
         return self.eos if r.eos_id is None else r.eos_id
@@ -446,6 +548,7 @@ class ServeEngine:
         generated = np.zeros((len(group), max_new), np.int32)
         done = np.asarray([lim == 0 for lim in new_limits])  # 0-limit rows emit nothing
         steps = np.zeros(len(group), np.int32)
+        status = ["ok"] * len(group)
         eos_for = [self._eos_for(r) for r in group]
         # logits carry batch_size rows (padding rows included) — size the
         # per-row sampling params to match.
@@ -463,6 +566,20 @@ class ServeEngine:
         # dispatch is async, the unforced timestamp would exclude device time.
         ttft = time.perf_counter() - t0
         for t in range(max_new):
+            # Boundary checks BEFORE recording: a request cancelled (or past
+            # its deadline) before this iteration keeps only what it already
+            # has — a deadline_s=0 request resolves with zero tokens.
+            now_s = time.perf_counter() - t0
+            for j, r in enumerate(group):
+                if done[j]:
+                    continue
+                if r.rid in self._cancelled:
+                    done[j] = True
+                    status[j] = "cancelled"
+                    self._cancelled.discard(r.rid)
+                elif r.deadline_s is not None and now_s > r.deadline_s:
+                    done[j] = True
+                    status[j] = "deadline"
             for j in range(len(group)):
                 if not done[j]:
                     generated[j, t] = int(cur[j, 0])
@@ -485,6 +602,7 @@ class ServeEngine:
                 steps=int(steps[j]),
                 ttft_s=ttft,
                 tpot_s=_tpot(total - ttft, int(steps[j])),
+                status=status[j],
             )
             for j, r in enumerate(group)
         ]
@@ -494,11 +612,23 @@ class ServeEngine:
 
     def _record_result(self, res: GenerationResult) -> None:
         """Publish one finished request into the registry (NaN TPOT — a
-        single-token generation — is dropped by the histogram)."""
+        single-token generation — is dropped by the histogram). Latency
+        histograms only see ``status="ok"`` requests — a shed or expired
+        request's wall time is a policy artifact, not a latency sample —
+        while each non-ok terminal status counts into its own series."""
         self._m_req_finished.inc()
         self._m_generated.inc(res.steps)
-        self._m_ttft.observe(res.ttft_s)
-        self._m_tpot.observe(res.tpot_s)
+        if res.status == "ok":
+            self._m_ttft.observe(res.ttft_s)
+            self._m_tpot.observe(res.tpot_s)
+        elif res.status == "deadline":
+            self._m_deadline.inc()
+        elif res.status == "cancelled":
+            self._m_cancel.inc()
+        elif res.status == "shed":
+            self._m_shed.inc()
+        elif res.status == "failed":
+            self._m_failed.inc()
 
     def _sample(self, logits: jax.Array, temps, seeds, count: int) -> jnp.ndarray:
         counts = jnp.full(seeds.shape, count, jnp.int32)
@@ -578,10 +708,16 @@ class ServeEngine:
             cap,
             prefix_sharing=self.prefix_sharing,
             registry=self.obs,
+            admission=self.admission,
+            n_pages=self.pool_pages,
+            faults=self.faults,
         )
         self.last_pool = pool  # exposed for benches/tests (sharing counters)
 
         results: dict[int, GenerationResult] = {}
+        resume: dict[int, list[int]] = {}   # preempted: id(req) -> generated
+        n_preempts: dict[int, int] = {}     # id(req) -> times preempted
+        tally = {"preempt": 0, "restore": 0}
         cur = np.full((n_slots,), self.eos, np.int32)  # last sampled token
         temps = np.zeros((n_slots,), np.float32)
         seeds = np.zeros((n_slots,), np.int32)
@@ -589,24 +725,78 @@ class ServeEngine:
         t0 = time.perf_counter()
         first_t: dict[int, float] = {}
 
-        def finish(slot: int) -> None:
+        def resolve(r, tokens: list, status: str) -> None:
+            # Terminal for ANY lifecycle outcome — every submitted request
+            # funnels through here exactly once, with a typed status and
+            # whatever (possibly partial) tokens it produced.
+            now = time.perf_counter()
+            n_tok = len(tokens)
+            ttft = first_t.pop(id(r), now) - t0
+            res = GenerationResult(
+                rid=r.rid,
+                tokens=np.asarray(tokens, np.int32),
+                steps=n_tok,
+                ttft_s=ttft,
+                tpot_s=_tpot((now - t0) - ttft, n_tok),
+                status=status,
+                n_preemptions=n_preempts.get(id(r), 0),
+            )
+            results[id(r)] = res
+            self._cancelled.discard(r.rid)
+            self._record_result(res)
+
+        def finish(slot: int, status: str = "ok") -> None:
+            st = sched.retire(slot)
+            pool.release(slot)
+            cur[slot] = self.eos
+            temps[slot] = 0.0
+            resolve(st.request, list(st.generated), status)
+
+        def preempt(slot: int) -> None:
+            # Evict a live slot under pool pressure: release its pages and
+            # requeue it at the queue head (restore = chunked re-prefill of
+            # prompt + generated-so-far through the same mixed step), or
+            # fail it cleanly once past its preemption bound.
             st = sched.retire(slot)
             pool.release(slot)
             cur[slot] = self.eos
             temps[slot] = 0.0
             r = st.request
-            now = time.perf_counter()
-            n_tok = len(st.generated)
-            ttft = first_t.pop(id(r), now) - t0
-            res = GenerationResult(
-                rid=r.rid,
-                tokens=np.asarray(st.generated, np.int32),
-                steps=n_tok,
-                ttft_s=ttft,
-                tpot_s=_tpot((now - t0) - ttft, n_tok),
+            n_pre = n_preempts.get(id(r), 0) + 1
+            n_preempts[id(r)] = n_pre
+            limit = (
+                self.max_preemptions
+                if getattr(r, "max_preemptions", None) is None
+                else r.max_preemptions
             )
-            results[id(r)] = res
-            self._record_result(res)
+            if n_pre > limit:
+                resolve(r, list(st.generated), "failed")
+                return
+            resume[id(r)] = list(st.generated)
+            sched.requeue(r)
+            tally["preempt"] += 1
+            self._m_preempt.inc()
+            self._m_req_requeued.inc()
+            tr.instant(
+                "serve.preempt", rid=r.rid, slot=slot,
+                generated=len(st.generated),
+            )
+
+        def preempt_victim() -> bool:
+            cands = [
+                (
+                    i,
+                    getattr(sched.slots[i].request, "priority", 0),
+                    len(sched.slots[i].generated),
+                    pool.shared_donor(i),
+                )
+                for i in sched.active_slots()
+                if not sched.slots[i].done
+            ]
+            if not cands:
+                return False
+            preempt(select_victim(cands))
+            return True
 
         tr = self.tracer
         step_fn = self._mixed_step_fn()
@@ -616,23 +806,96 @@ class ServeEngine:
         while sched.has_work():
             t_iter = time.perf_counter()
             with tr.span("serve.step", step=step):
+                # ---- step-boundary lifecycle checks (DESIGN.md §12) ----
+                if self.faults is not None:
+                    self.faults.begin_step(step)
+                    for rid in self.faults.take_cancels():
+                        self._cancelled.add(int(rid))
+                if self._cancelled:
+                    hit = sched.drain_waiting(
+                        lambda r: r.rid in self._cancelled
+                    )
+                    for r in hit:
+                        resolve(r, resume.pop(id(r), []), "cancelled")
+                    for i in list(sched.active_slots()):
+                        if sched.slots[i].request.rid in self._cancelled:
+                            finish(i, "cancelled")
+                now_s = time.perf_counter() - t0
+                for r in sched.drain_waiting(
+                    lambda r: r.deadline_s is not None and now_s > r.deadline_s
+                ):
+                    resolve(r, resume.pop(id(r), []), "deadline")
+                for i in list(sched.active_slots()):
+                    r = sched.slots[i].request
+                    if r.deadline_s is not None and now_s > r.deadline_s:
+                        finish(i, "deadline")
+
                 # Admission: fill free slots with arrived requests while the
-                # pool can reserve their (sharing-reduced) worst case.
-                while (slot := sched.free_slot()) is not None:
+                # pool can reserve their (sharing-reduced) worst case. The
+                # high watermark pauses admission under pool pressure so new
+                # work does not immediately thrash running work back out via
+                # preemption; with no active slots it never pauses (only
+                # retirements can lower occupancy — registered prefix pages
+                # legitimately outlive their donors).
+                paused = (
+                    pool.occupancy() >= self._watermark
+                    and bool(sched.active_slots())
+                )
+                self._m_admit_paused.set(float(paused))
+                while not paused and (slot := sched.free_slot()) is not None:
                     req = sched.pop_admissible(step)
                     if req is None:
                         break
-                    if not self._admit(req, slot, sched, pool, temps, seeds,
-                                       counts, idx_of[id(req)]):
+                    restored = id(req) in resume
+                    ctx = (
+                        tr.span("serve.preempt_restore", rid=req.rid)
+                        if restored
+                        else contextlib.nullcontext()
+                    )
+                    with ctx:
+                        st = self._admit(
+                            req, slot, sched, pool, temps, seeds, counts,
+                            idx_of.get(id(req), 0), prior=resume.get(id(req)),
+                        )
+                    if st is None:
                         sched.requeue(req)  # no pages yet; retry after retirements
                         self._m_req_requeued.inc()
                         break
+                    resume.pop(id(req), None)
                     self._m_req_admitted.inc()
-                    if sched.slots[slot].done:  # zero-limit request: emits nothing
+                    if restored and st.prompt is not None:
+                        n_re = int(len(st.prompt) - st.prompt_pos)
+                        tally["restore"] += n_re
+                        self._m_restore_tok.inc(n_re)
+                    if st.done:  # zero-limit request: emits nothing
                         finish(slot)
 
-                with tr.span("serve.plan_step"):
-                    plan = sched.plan_step()
+                # Load shed AFTER admission drained what it could: the
+                # queue bound applies to arrived requests this boundary
+                # could not place, newest rejected first.
+                if self.max_queue is not None:
+                    for r in sched.shed_over(step, self.max_queue):
+                        resolve(r, resume.pop(id(r), []), "shed")
+
+                # Plan under pressure: make every planned row writable; a
+                # mid-step PoolExhausted (optimistic oversubscription or an
+                # injected fault) preempts one victim and re-plans. Each
+                # retry removes one active slot — the victim may be the very
+                # slot that failed — so this terminates. ensure_writable is
+                # idempotent; re-ensured rows are no-ops on retry.
+                while True:
+                    with tr.span("serve.plan_step"):
+                        plan = sched.plan_step()
+                    if not plan:
+                        break
+                    try:
+                        for it in plan:
+                            pool.ensure_writable(it.slot, it.q_len)
+                    except PoolExhausted:
+                        if not preempt_victim():
+                            raise
+                        continue
+                    break
                 self._m_queue.set(len(sched.waiting))
                 self._m_active.set(len(sched.active_slots()))
                 if not plan:
@@ -659,15 +922,18 @@ class ServeEngine:
                         tokens[it.slot, 0] = cur[it.slot]
                         n_decode += 1
                     qlens[it.slot] = it.q_len
-                    pool.ensure_writable(it.slot, it.q_len)  # grow + CoW forks
 
                 # The device span closes only after the sampled tokens are
                 # host-materialized, so it brackets real device time (the
-                # dispatch itself is async).
-                with tr.span(
-                    "serve.device_step", width=width, rows=len(plan),
-                    tokens=planned,
-                ):
+                # dispatch itself is async). The step is functional (pages
+                # come back as fresh arrays; the pool adopts them only on
+                # success), so a failed dispatch leaves no partial state and
+                # a retry re-runs the identical computation: one transient
+                # failure is retried once, a second failure fails the
+                # step's rows cleanly and the engine moves on.
+                def dispatch():
+                    if self.faults is not None:
+                        self.faults.raise_if("device.step")
                     with self._mesh_ctx():
                         toks_dev, pages = step_fn(
                             self.params,
@@ -685,7 +951,25 @@ class ServeEngine:
                             seeds,
                             counts,
                         )
-                    toks = np.asarray(toks_dev)
+                    return np.asarray(toks_dev), pages
+
+                with tr.span(
+                    "serve.device_step", width=width, rows=len(plan),
+                    tokens=planned,
+                ):
+                    try:
+                        toks, pages = dispatch()
+                    except Exception:
+                        self._m_retries.inc()
+                        tr.instant("serve.step_retry", step=step)
+                        try:
+                            toks, pages = dispatch()
+                        except Exception:
+                            for it in plan:
+                                if sched.slots[it.slot] is not None:
+                                    finish(it.slot, "failed")
+                            step += 1
+                            continue
                 pool.update_pages(pages)
                 cc = self.compiled_step_count()
                 if cc > last_cc:
@@ -715,6 +999,10 @@ class ServeEngine:
                     cur[it.slot] = tok
                     if st.record(tok):
                         finish(it.slot)
+                if self.faults is not None and self.faults.fired_this_step:
+                    # Every injected fault is followed by a full pool
+                    # consistency audit at the very step that absorbed it.
+                    pool.check_invariants()
                 pool.emit_gauges()
                 if self.order_ctl is not None and self.order_ctl.enabled:
                     # Adaptation drives its own sampling cadence (the
@@ -731,15 +1019,28 @@ class ServeEngine:
             if self._log_every and n_steps and n_steps % self._log_every == 0:
                 self._log_stats_line(n_steps, pool, sched)
 
+        # A drained stream is definitionally un-paused: the loop can exit
+        # right after the final retirement, before any boundary recomputes
+        # the watermark, and the gauge must not stay latched at 1.
+        self._m_admit_paused.set(0.0)
         # Deterministic work counters for benches / CI trend lines (wall
         # clock on a shared CI box is noisy; step counts are not). Typed
         # snapshot of this stream; cumulative totals live in the registry.
+        by_status: dict[str, int] = {}
+        for res in results.values():
+            by_status[res.status] = by_status.get(res.status, 0) + 1
         self.last_stats = StepStats(
             mixed_steps=n_steps,
             wide_steps=n_wide,
             pages_adopted=pool.shared_hits,
             prompt_tokens_adopted=pool.shared_tokens,
             cow_forks=pool.cow_forks,
+            preemptions=tally["preempt"],
+            restore_tokens=tally["restore"],
+            shed=by_status.get("shed", 0),
+            deadline_miss=by_status.get("deadline", 0),
+            cancelled=by_status.get("cancelled", 0),
+            failed=by_status.get("failed", 0),
         )
         return [results[id(r)] for r in requests]
 
@@ -758,14 +1059,34 @@ class ServeEngine:
         )
 
     def _admit(
-        self, req: Request, slot: int, sched, pool, temps, seeds, counts, idx: int
-    ) -> bool:
-        """Admit ``req`` into ``slot``; False if the pool lacks pages.
+        self,
+        req: Request,
+        slot: int,
+        sched,
+        pool,
+        temps,
+        seeds,
+        counts,
+        idx: int,
+        prior: Optional[list] = None,
+    ):
+        """Admit ``req`` into ``slot``; returns the placed ``Slot`` or None
+        if the pool lacks pages.
 
         No prefill happens here — the prompt's non-shared tokens run
         through the mixed step as chunks. The pool adopts any registered
         shared prefix (its KV is already resident), so ``prompt_pos``
         starts past the adopted tokens.
+
+        ``prior`` (a preempted request's generated-so-far) turns admission
+        into a *restore*: the effective prompt becomes prompt + prior —
+        re-prefilled chunk-wise through the same compiled mixed step, no
+        restore kernel — the slot's generated list is pre-seeded with the
+        prior tokens (so ``new_limit`` and EOS accounting continue, not
+        restart), and the sampling count resumes at ``len(prior)``. Row
+        PRNG keys depend only on (engine seed, request seed, count), never
+        on the slot or the step, so the restored stream is bitwise the
+        uninterrupted one — for greedy and sampled rows alike.
         """
         cap = self._cap
         prompt = np.asarray(req.tokens, np.int32)[-cap:]
@@ -776,19 +1097,27 @@ class ServeEngine:
             # Nothing to emit — resolve without consuming pages.
             st = sched.place(slot, req, eos_id=self._eos_for(req), new_limit=0)
             st.done = True
-            return True
-        shared = pool.admit(slot, prompt, new_limit)
+            return st
+        prior = list(prior) if prior else []
+        if prior:
+            # len(prompt+prior) <= len(prompt) + new_limit - 1 <= cap by the
+            # new_limit clamp above, so the restore prompt always fits.
+            full = np.concatenate([prompt, np.asarray(prior, np.int32)])
+        else:
+            full = prompt
+        shared = pool.admit(slot, full, new_limit - len(prior))
         if shared is None:
-            return False
-        sched.place(
+            return None
+        st = sched.place(
             slot,
             req,
             eos_id=self._eos_for(req),
             new_limit=new_limit,
-            prompt=prompt,
+            prompt=full,
             prompt_pos=shared,
         )
+        st.generated = prior
         temps[slot] = req.temperature
         seeds[slot] = self._seed_for(req, idx)
-        counts[slot] = 0
-        return True
+        counts[slot] = len(prior)
+        return st

@@ -27,12 +27,25 @@ refcounts and frees+unregisters pages that hit zero, so sharing survives
 the donor's retirement for as long as any adopter still holds the pages.
 
 Allocation is lazy (a sequence materializes owned pages as its writes cross
-page boundaries) with worst-case admission reservation: a request is
-admitted only if the pool can cover its *non-shared* worst case — prompt +
-full ``max_new_tokens``, minus the adopted pages that can never be written —
-on top of every running sequence's outstanding reservation, so ``grow`` and
-CoW forks never fail mid-flight and no preemption machinery is needed. int8
-pools (``kv_cache_dtype='int8'``) carry the per-vector scales from
+page boundaries). Two admission disciplines (DESIGN.md §12):
+
+* ``admission="reserve"`` (default) — worst-case reservation: a request is
+  admitted only if the pool can cover its *non-shared* worst case — prompt
+  + full ``max_new_tokens``, minus the adopted pages that can never be
+  written — on top of every running sequence's outstanding reservation, so
+  lazy growth and CoW forks never fail mid-flight.
+* ``admission="optimistic"`` — only the *prompt's* pages are reserved;
+  decode growth competes for the remaining pool, so the pool can be
+  oversubscribed and mid-flight allocation can fail with a typed
+  :class:`PoolExhausted` — the serve engine's pool-pressure preemption
+  (victim selection + chunked re-prefill restore) is the recovery path.
+
+Failures are typed: :class:`PoolExhausted` (allocation), ``AdmissionError``
+(admission misuse); both keep their legacy base (``RuntimeError`` /
+``ValueError``) for one release so existing ``except`` clauses still catch
+them. ``release`` is idempotent — double-retiring a slot during preemption
+cleanup is a no-op, never a refcount corruption. int8 pools
+(``kv_cache_dtype='int8'``) carry the per-vector scales from
 ``repro.dist.compression`` as parallel page arrays and halve the pool's HBM
 footprint.
 """
@@ -50,7 +63,36 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 
-__all__ = ["PagePool", "PagedKVPool", "assemble_cache_view"]
+__all__ = [
+    "PagePool",
+    "PagedKVPool",
+    "assemble_cache_view",
+    "PoolError",
+    "PoolExhausted",
+    "AdmissionError",
+]
+
+
+class PoolError(RuntimeError):
+    """Base of the serve pool's typed failures (``RuntimeError`` kept as a
+    base for one release so legacy ``except RuntimeError`` still catches)."""
+
+
+class PoolExhausted(PoolError):
+    """Page allocation could not be satisfied from the free list.
+
+    Under ``admission="reserve"`` this can only happen through fault
+    injection; under ``admission="optimistic"`` it is the steady-state
+    pressure signal the engine answers with preemption.
+    """
+
+
+class AdmissionError(PoolError, ValueError):
+    """Admission-path misuse (occupied slot, unusable pool geometry).
+
+    Inherits both legacy bases — these paths used to raise bare
+    ``RuntimeError`` or ``ValueError`` depending on the call site.
+    """
 
 
 def assemble_cache_view(
@@ -88,15 +130,20 @@ class PagePool:
 
     Page 0 is never handed out (reserved dummy). ``reserved`` tracks pages
     promised to admitted-but-not-yet-written sequences; ``available`` is
-    what a new admission may claim.
+    what a new admission may claim. ``faults`` is the no-op fault-injection
+    hook (``serve.faults.FaultPlan``): when attached, an ``alloc`` that the
+    plan schedules to fail raises :class:`PoolExhausted` exactly as a real
+    exhaustion would, so the engine's preemption path is testable on a pool
+    that is not actually full.
     """
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, *, faults=None):
         if n_pages < 2:
-            raise ValueError(f"pool needs >= 2 pages (1 dummy), got {n_pages}")
+            raise AdmissionError(f"pool needs >= 2 pages (1 dummy), got {n_pages}")
         self.n_pages = n_pages
         self._free: list[int] = list(range(n_pages - 1, 0, -1))  # pop() -> low ids
         self.reserved = 0
+        self.faults = faults
 
     @property
     def free_count(self) -> int:
@@ -107,8 +154,14 @@ class PagePool:
         return self.free_count - self.reserved
 
     def alloc(self, n: int) -> list[int]:
+        if self.faults is not None and self.faults.take("pool.alloc"):
+            raise PoolExhausted(
+                f"injected pool exhaustion: want {n}, free {self.free_count}"
+            )
         if n > self.free_count:
-            raise RuntimeError(f"page pool exhausted: want {n}, free {self.free_count}")
+            raise PoolExhausted(
+                f"page pool exhausted: want {n}, free {self.free_count}"
+            )
         return [self._free.pop() for _ in range(n)]
 
     def free(self, ids) -> None:
@@ -155,18 +208,36 @@ class PagedKVPool:
         dtype=None,
         prefix_sharing: bool = True,
         registry=None,
+        admission: str = "reserve",
+        n_pages: Optional[int] = None,
+        faults=None,
     ):
         if cfg.window is not None:
             raise ValueError("paged KV pools require full attention (window=None)")
+        if admission not in ("reserve", "optimistic"):
+            raise AdmissionError(f"unknown admission discipline {admission!r}")
         self.cfg = cfg
         self.n_slots = n_slots
         self.prefix_sharing = prefix_sharing
+        self.admission = admission
         self.page, self.blocks_per_seq = T.page_geometry(cfg, max_len)
         self.capacity = self.blocks_per_seq * self.page
-        n_pages = n_slots * self.blocks_per_seq + 1  # +1 reserved dummy page 0
-        self.alloc = PagePool(n_pages)
+        # ``n_pages`` (allocatable pages, dummy excluded) defaults to the
+        # full worst case — every slot at capacity. A smaller override is
+        # the oversubscription knob: less HBM than the slots could demand,
+        # with the engine's preemption absorbing the pressure. It must still
+        # fit one capacity row, or some admissions could never succeed.
+        if n_pages is None:
+            n_pages = n_slots * self.blocks_per_seq
+        if n_pages < self.blocks_per_seq:
+            raise AdmissionError(
+                f"pool of {n_pages} pages cannot fit one {self.blocks_per_seq}"
+                f"-page capacity row"
+            )
+        self.alloc = PagePool(n_pages + 1, faults=faults)  # +1 dummy page 0
+        self.faults = faults
 
-        shape = (n_layers, n_pages, self.page, cfg.n_kv_heads, cfg.hd)
+        shape = (n_layers, self.alloc.n_pages, self.page, cfg.n_kv_heads, cfg.hd)
         self.pages: dict[str, jax.Array] = {}
         if cfg.kv_cache_dtype == "int8":
             for name in ("k_pages", "v_pages"):
@@ -179,7 +250,7 @@ class PagedKVPool:
 
         self.block_tables = np.zeros((n_slots, self.blocks_per_seq), np.int32)
         self.lens = np.zeros((n_slots,), np.int32)
-        self._ref = np.zeros((n_pages,), np.int32)
+        self._ref = np.zeros((self.alloc.n_pages,), np.int32)
         self._slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
         self._slot_reserved: list[int] = [0] * n_slots
         # Prefix registry: parent-chain-hash -> (physical page, its tokens).
@@ -255,15 +326,25 @@ class PagedKVPool:
 
     def admit(self, slot: int, prompt: np.ndarray, max_new: int) -> Optional[int]:
         """Admit a request into ``slot``: adopt the shared prefix, reserve
-        the owned worst case. Returns the number of prompt tokens whose KV
-        was adopted (0 if none), or None when the pool lacks pages.
+        the owned pages this discipline guarantees. Returns the number of
+        prompt tokens whose KV was adopted (0 if none), or None when the
+        pool lacks pages.
 
-        No K/V is copied and nothing is prefilled here — the engine's ragged
-        mixed step computes the non-shared tokens chunk by chunk, writing
-        through the block table into lazily materialized owned pages.
+        ``admission="reserve"`` reserves the worst case (prompt + full
+        ``max_new``); ``"optimistic"`` reserves only the prompt's pages —
+        decode growth then competes for the leftover pool and can raise
+        :class:`PoolExhausted` mid-flight, which the engine answers with
+        preemption. No K/V is copied and nothing is prefilled here — the
+        engine's ragged mixed step computes the non-shared tokens chunk by
+        chunk, writing through the block table into lazily materialized
+        owned pages.
         """
-        if self._slot_pages[slot] or self.lens[slot]:
-            raise RuntimeError(f"slot {slot} is occupied")
+        if self._slot_pages[slot] or self._slot_reserved[slot] or self.lens[slot]:
+            # A freshly admitted slot with no adopted prefix holds no pages
+            # and has len 0 — its reservation is what marks it occupied.
+            raise AdmissionError(f"slot {slot} is occupied")
+        if self.faults is not None and self.faults.take("pool.admit"):
+            return None  # injected admission pressure
         prompt = np.asarray(prompt, np.int32)
         prompt_len = min(len(prompt), self.capacity)
         covered, pids = self.match_prefix(prompt)
@@ -271,8 +352,11 @@ class PagedKVPool:
         # again; a partially covered tail page will be CoW-forked (one page
         # from the reservation) on its first write.
         n_safe = covered // self.page
-        worst = self.pages_for(min(prompt_len + max_new, self.capacity))
-        need = worst - n_safe
+        guaranteed = (
+            prompt_len + max_new if self.admission == "reserve" else prompt_len
+        )
+        worst = self.pages_for(min(guaranteed, self.capacity))
+        need = max(worst - n_safe, 0)
         if self.alloc.available < need:
             return None
         for pid in pids:
@@ -291,10 +375,22 @@ class PagedKVPool:
         return covered
 
     def _take_page(self, slot: int) -> int:
-        (pid,) = self.alloc.alloc(1)
-        self.alloc.reserved -= 1
-        self._slot_reserved[slot] -= 1
-        assert self._slot_reserved[slot] >= 0, "allocation beyond reservation"
+        if self._slot_reserved[slot] > 0:
+            (pid,) = self.alloc.alloc(1)
+            self.alloc.reserved -= 1
+            self._slot_reserved[slot] -= 1
+        else:
+            # Beyond the reservation: legal only under optimistic admission,
+            # and only from the unreserved remainder — a take here must not
+            # eat a page promised to another (reserve-guaranteed) slot.
+            if self.admission == "reserve":
+                raise AssertionError("allocation beyond reservation")
+            if self.alloc.available < 1:
+                raise PoolExhausted(
+                    f"optimistic growth for slot {slot}: free "
+                    f"{self.alloc.free_count}, reserved {self.alloc.reserved}"
+                )
+            (pid,) = self.alloc.alloc(1)
         self._ref[pid] = 1
         return pid
 
@@ -375,7 +471,30 @@ class PagedKVPool:
                 self._page_parent[pid] = h
             h = _hash_step(h, ptoks)
 
+    def shared_donor(self, slot: int) -> bool:
+        """Whether ``slot`` holds any page other slots also hold (refcount >
+        1). Releasing such a slot frees fewer pages than it holds — the
+        preemption victim policy prefers non-donors for exactly that reason.
+        """
+        return any(self._ref[pid] > 1 for pid in self._slot_pages[slot])
+
+    def occupancy(self) -> float:
+        """Held fraction of the allocatable pool (admission watermarks)."""
+        n_alloc = self.alloc.n_pages - 1
+        return (n_alloc - self.alloc.free_count) / max(n_alloc, 1)
+
     def release(self, slot: int) -> None:
+        """Release every page ``slot`` holds. Idempotent: releasing an
+        already-free slot is a no-op, so a double-retire during preemption
+        cleanup (engine retires, then a failure path retires again) cannot
+        drive refcounts negative or free pages twice."""
+        if (
+            not self._slot_pages[slot]
+            and not self._slot_reserved[slot]
+            and not self.lens[slot]
+        ):
+            self.block_tables[slot] = 0
+            return
         for pid in self._slot_pages[slot]:
             self._ref[pid] -= 1
             if self._ref[pid] == 0:

@@ -124,8 +124,33 @@ class ContinuousScheduler:
 
     def requeue(self, request) -> None:
         """Put an admissible-but-unplaceable request back at the queue head
-        (no pages free yet — admission stays FIFO, no overtaking)."""
+        (no pages free yet — admission stays FIFO, no overtaking). Preempted
+        requests also land here: they restart before later arrivals."""
         self.waiting.insert(0, request)
+
+    def drain_waiting(self, pred) -> list:
+        """Remove and return every waiting request matching ``pred`` (used
+        for boundary-time cancellation / deadline expiry of queued work)."""
+        hit = [r for r in self.waiting if pred(r)]
+        if hit:
+            self.waiting = [r for r in self.waiting if not pred(r)]
+        return hit
+
+    def shed_over(self, step: int, max_queue: int) -> list:
+        """Load-shed: drop the newest *arrived* requests beyond ``max_queue``.
+
+        Only requests whose ``arrival`` has passed count against the bound —
+        future traffic modeled by the benchmark's staggered arrivals has not
+        actually joined the queue yet. Reject-newest keeps the policy fair to
+        earlier arrivals (FIFO order is preserved for survivors).
+        """
+        arrived = [r for r in self.waiting if getattr(r, "arrival", 0) <= step]
+        if len(arrived) <= max_queue:
+            return []
+        shed = arrived[max_queue:]
+        drop = set(map(id, shed))
+        self.waiting = [r for r in self.waiting if id(r) not in drop]
+        return shed
 
     # ---- step planning -------------------------------------------------------
 

@@ -108,6 +108,30 @@ def test_consider_resets_on_candidate_change_and_dropout():
     assert ctl.order is Order.BLOCK_SNAKE
 
 
+def test_blend_flips_decision_with_shared_fraction():
+    """The shared-prefix LLC model changes the verdict once enough of the
+    pool is shared pages: below ``shared_threshold`` the fwd reading passes
+    through untouched (no switch — its margin is under hysteresis); above
+    it the ``(1-w)*fwd + w*shared`` blend flips the argmin to the order the
+    shared model favors."""
+    ctl = _ctl(hysteresis=0.05, confirm=1, shared_threshold=0.25)
+    fwd = {"cyclic": 100.0, "sawtooth": 98.0, "block_snake": 99.0}
+    shared = {"cyclic": 100.0, "sawtooth": 200.0, "block_snake": 40.0}
+    # Below the threshold the shared reading is ignored: fwd's best
+    # (sawtooth, 2%) is under the 5% hysteresis, so nothing moves.
+    assert ctl.blend(fwd, shared, 0.1) == fwd
+    assert not ctl.consider(fwd, shared_miss=shared, shared_frac=0.1)
+    assert ctl.order is Order.CYCLIC
+    # At w=0.5 the blend scores block_snake 0.5*99 + 0.5*40 = 69.5 — a 30%
+    # improvement over cyclic's 100 — and the order flips.
+    assert ctl.blend(fwd, shared, 0.5)["block_snake"] == pytest.approx(69.5)
+    assert ctl.consider(fwd, shared_miss=shared, shared_frac=0.5)
+    assert ctl.order is Order.BLOCK_SNAKE
+    # Orders the shared model did not score fall back to their fwd value.
+    part = ctl.blend({"cyclic": 10.0, "sawtooth": 20.0}, {"cyclic": 30.0}, 1.0)
+    assert part == {"cyclic": 30.0, "sawtooth": 20.0}
+
+
 def test_consider_handles_empty_and_missing_current():
     ctl = _ctl(confirm=1)
     assert not ctl.consider(None)

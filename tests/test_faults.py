@@ -1,0 +1,213 @@
+"""Deterministic fault injection (repro.serve.faults) through the engine.
+
+FaultPlan unit semantics first — step-addressed arming, ``times``
+consumption, cancel targeting, seeded-random reproducibility — then the
+engine integration the hooks exist for: an injected ``PoolExhausted`` must
+take the same preemption path a genuinely starved pool does, a transient
+device-step failure must be retried once and leave the token stream
+bitwise-untouched, a persistent one must fail the step's rows *typed* and
+keep serving, and a seeded chaos plan must resolve every request with a
+typed status while the pool invariants hold (the engine asserts them after
+every step in which a fault fired).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (
+    FAULT_SITES,
+    Fault,
+    FaultPlan,
+    PagePool,
+    PoolExhausted,
+    Request,
+    ServeEngine,
+    StepFault,
+)
+
+
+@pytest.fixture(scope="module")
+def deepseek_lm():
+    cfg = get_config("deepseek-7b").reduced()
+    lm = build_model(cfg)
+    return lm, lm.init(jax.random.PRNGKey(0))
+
+
+def _reqs(vocab, n, *, plen=24, max_new=8):
+    rng = np.random.default_rng(5)
+    return [
+        Request(
+            tokens=rng.integers(2, vocab, size=plen).astype(np.int32),
+            max_new_tokens=max_new,
+            rid=i,
+        )
+        for i in range(n)
+    ]
+
+
+def _engine(lm, params, **kw):
+    return ServeEngine(
+        lm, params, batch_size=2, max_len=64, scheduler="continuous",
+        page_size=16, prefill_chunk=16, **kw,
+    )
+
+
+# ---- FaultPlan unit semantics ------------------------------------------------
+
+
+def test_fault_site_validation():
+    with pytest.raises(ValueError):
+        Fault("pool.everything", 0)
+    assert set(FAULT_SITES) == {"pool.alloc", "pool.admit", "device.step", "cancel"}
+
+
+def test_plan_arms_by_step_and_consumes_times():
+    plan = FaultPlan().exhaust_pool(2, times=2).refuse_admission(0)
+    assert not plan.take("pool.alloc")  # begin_step never called: nothing arms
+    plan.begin_step(0)
+    assert plan.take("pool.admit")      # due at step 0
+    assert not plan.take("pool.admit")  # times exhausted
+    assert not plan.take("pool.alloc")  # not armed until step 2
+    plan.begin_step(1)
+    assert plan.fired_this_step == 0    # reset each boundary
+    plan.begin_step(3)                  # past the scheduled step still fires
+    assert plan.take("pool.alloc") and plan.take("pool.alloc")
+    assert not plan.take("pool.alloc")
+    assert plan.exhausted
+    assert [f["site"] for f in plan.fired] == [
+        "pool.admit", "pool.alloc", "pool.alloc"
+    ]
+    assert plan.fired_this_step == 2
+
+
+def test_take_cancels_and_raise_if():
+    plan = FaultPlan().cancel(1, rid=7).cancel(1, rid=9).fail_device_step(1)
+    plan.begin_step(0)
+    assert plan.take_cancels() == []
+    plan.begin_step(1)
+    assert plan.take_cancels() == [7, 9]
+    assert plan.take_cancels() == []    # consumed
+    with pytest.raises(StepFault):
+        plan.raise_if("device.step")
+    plan.raise_if("device.step")        # exhausted: no-op
+    assert plan.exhausted
+
+
+def test_injected_alloc_failure_raises_pool_exhausted():
+    plan = FaultPlan().exhaust_pool(0)
+    plan.begin_step(0)
+    pool = PagePool(8, faults=plan)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(1)                   # injected: pool is NOT actually full
+    assert pool.alloc(1)                # consumed: real allocation proceeds
+
+
+def test_random_plan_is_seed_deterministic():
+    mk = lambda s: FaultPlan.random(s, n_steps=12, rids=(0, 1, 2))
+    a, b, c = mk(3), mk(3), mk(4)
+    key = lambda p: [(f.site, f.step, f.rid) for f in p.faults]
+    assert key(a) == key(b)
+    assert key(a) != key(c)
+    assert len(a.faults) == 3           # one exhaust + one step-fail + one cancel
+
+
+# ---- engine integration ------------------------------------------------------
+
+
+def test_five_resilience_series_exist_at_zero(deepseek_lm):
+    lm, params = deepseek_lm
+    eng = _engine(lm, params)
+    for name in ("serve.preemptions", "serve.restore_tokens", "serve.shed",
+                 "serve.deadline_miss", "serve.cancelled"):
+        assert eng.obs.value(name) == 0
+    assert eng.obs.find("serve.admission_paused") is not None
+
+
+def test_injected_exhaustion_preempts_with_parity(deepseek_lm):
+    """An injected PoolExhausted on a pool with plenty of pages drives the
+    exact preemption/restore path real starvation does — observable in the
+    metrics, invisible in the greedy tokens."""
+    lm, params = deepseek_lm
+    ref = _engine(lm, params)
+    res_ref = ref.generate(_reqs(lm.cfg.vocab, 2, max_new=12))
+    plan = FaultPlan().exhaust_pool(3)
+    eng = _engine(
+        lm, params, admission="optimistic", max_preemptions=5, faults=plan
+    )
+    res = eng.generate(_reqs(lm.cfg.vocab, 2, max_new=12))
+    assert plan.exhausted
+    assert eng.last_stats.preemptions >= 1
+    assert eng.obs.value("serve.preemptions") == eng.last_stats.preemptions
+    assert eng.obs.value("serve.restore_tokens") > 0
+    for a, b in zip(res_ref, res):
+        assert b.status == "ok"
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert eng.compiled_step_count() == 2
+
+
+def test_injected_admission_refusal_requeues(deepseek_lm):
+    lm, params = deepseek_lm
+    plan = FaultPlan().refuse_admission(0)
+    eng = _engine(lm, params, faults=plan)
+    res = eng.generate(_reqs(lm.cfg.vocab, 2))
+    assert plan.exhausted
+    assert all(r.status == "ok" for r in res)  # refused once, admitted later
+    assert eng.obs.value("serve.requests", event="requeued") >= 1
+
+
+def test_transient_step_failure_retried_once(deepseek_lm):
+    lm, params = deepseek_lm
+    ref = _engine(lm, params)
+    res_ref = ref.generate(_reqs(lm.cfg.vocab, 2))
+    plan = FaultPlan().fail_device_step(2)
+    eng = _engine(lm, params, faults=plan)
+    res = eng.generate(_reqs(lm.cfg.vocab, 2))
+    assert plan.exhausted
+    assert eng.obs.value("serve.step_retries") == 1
+    assert all(r.status == "ok" for r in res)
+    for a, b in zip(res_ref, res):  # the retry re-ran identical computation
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_persistent_step_failure_fails_rows_typed(deepseek_lm):
+    """Two consecutive dispatch failures fail the step's planned rows with
+    status="failed" — and the engine keeps serving the queue."""
+    lm, params = deepseek_lm
+    plan = FaultPlan().fail_device_step(2, times=2)
+    eng = _engine(lm, params, faults=plan)
+    res = eng.generate(_reqs(lm.cfg.vocab, 3))
+    assert plan.exhausted
+    assert eng.obs.value("serve.step_retries") == 1
+    by = {r.rid: r.status for r in res}
+    assert set(by.values()) == {"failed", "ok"}
+    # Both active rows at the failing step die; the queued third request
+    # is admitted afterwards and completes.
+    assert [by[0], by[1], by[2]] == ["failed", "failed", "ok"]
+    assert eng.last_stats.failed == 2
+    eng.last_pool.check_invariants()
+
+
+def test_seeded_chaos_run_all_typed(deepseek_lm):
+    """FaultPlan.random: pool exhaustion + device failure + cancel, all from
+    one seed. Every request resolves typed, the pool invariants hold (the
+    engine checks them after every fault-firing step), and reruns of the
+    same seed produce the identical fired schedule."""
+    lm, params = deepseek_lm
+
+    def run(seed):
+        plan = FaultPlan.random(seed, n_steps=10, rids=(0, 1, 2, 3))
+        eng = _engine(
+            lm, params, admission="optimistic", max_preemptions=5, faults=plan
+        )
+        res = eng.generate(_reqs(lm.cfg.vocab, 4, max_new=12))
+        assert all(
+            r.status in ("ok", "cancelled", "failed") for r in res
+        ), [r.status for r in res]
+        eng.last_pool.check_invariants()
+        return [(f["site"], f["step"], f["rid"]) for f in plan.fired]
+
+    assert run(11) == run(11)

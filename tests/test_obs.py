@@ -284,6 +284,12 @@ def test_llc_shared_prefix_gauges_emitted_when_pages_shared():
             "llc.modeled_miss_bytes", order=order, model="shared_prefix"
         ) is not None
     assert reg.value("llc.shared_pages") == 2
+    # The history entry carries the shared-model readings + live shared
+    # fraction (the adaptation controller's blend inputs): 2 of 5 distinct
+    # resident pages are shared here.
+    entry = s.history[-1]
+    assert set(entry["shared_miss"]) == set(s.orders)
+    assert entry["shared_frac"] == pytest.approx(2 / 5)
 
 
 # ---- engine integration ------------------------------------------------------

@@ -1,0 +1,338 @@
+"""Serve-engine resilience layer (DESIGN.md §12).
+
+Typed request lifecycle end to end — deadlines, host cancellation, bounded-
+queue load shedding, pool-pressure preemption with chunked re-prefill
+restore — plus the pool-level pieces it stands on: the typed error
+hierarchy, idempotent release, the victim-selection policy, and a
+hypothesis random walk over the full slot lifecycle (admit / decode-step /
+cancel-release / preempt / restore / expire) holding the pool invariants.
+
+The one non-negotiable: preemption must be *invisible* in the output.
+A greedy stream served through an oversubscribed optimistic pool — where
+requests are evicted mid-decode and re-prefilled from scratch — must
+produce bitwise the tokens of an uncontended reserve engine, through the
+same two compiled step widths.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (
+    REQUEST_STATUSES,
+    AdmissionError,
+    FaultPlan,
+    GenerationResult,
+    PagedKVPool,
+    PagePool,
+    PoolError,
+    PoolExhausted,
+    Request,
+    ServeEngine,
+    select_victim,
+)
+
+SETTINGS = settings(max_examples=15, deadline=None)
+
+
+@pytest.fixture(scope="module")
+def deepseek_lm():
+    cfg = get_config("deepseek-7b").reduced()
+    lm = build_model(cfg)
+    return lm, lm.init(jax.random.PRNGKey(0))
+
+
+def _reqs(vocab, n, *, plen=24, max_new=8, **kw):
+    rng = np.random.default_rng(11)
+    return [
+        Request(
+            tokens=rng.integers(2, vocab, size=plen).astype(np.int32),
+            max_new_tokens=max_new,
+            rid=i,
+            **{k: (v(i) if callable(v) else v) for k, v in kw.items()},
+        )
+        for i in range(n)
+    ]
+
+
+# ---- typed statuses / errors -------------------------------------------------
+
+
+def test_result_status_defaults():
+    r = GenerationResult(rid=0, tokens=np.zeros(0, np.int32), steps=0)
+    assert r.status == "ok" and r.n_preemptions == 0
+    assert r.status in REQUEST_STATUSES
+    assert set(REQUEST_STATUSES) == {"ok", "deadline", "cancelled", "shed", "failed"}
+
+
+def test_typed_error_hierarchy():
+    # Legacy bases preserved: pre-PR-8 callers caught RuntimeError for
+    # exhaustion and ValueError for admission misuse.
+    assert issubclass(PoolExhausted, PoolError)
+    assert issubclass(PoolExhausted, RuntimeError)
+    assert issubclass(AdmissionError, PoolError)
+    assert issubclass(AdmissionError, ValueError)
+    pool = PagePool(4)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(4)  # only 3 allocatable (page 0 is the dummy)
+    with pytest.raises(AdmissionError):
+        PagePool(1)
+
+
+def test_pool_admission_errors():
+    cfg = get_config("deepseek-7b").reduced().with_(kv_layout="paged", page_size=4)
+    with pytest.raises(AdmissionError):
+        PagedKVPool(cfg, 1, 2, max_len=32, admission="bogus")
+    with pytest.raises(AdmissionError):
+        PagedKVPool(cfg, 1, 2, max_len=32, n_pages=3)  # < one capacity row
+    pool = PagedKVPool(cfg, 1, 2, max_len=32)
+    assert pool.admit(0, np.arange(2, 8, dtype=np.int32), 4) is not None
+    with pytest.raises(AdmissionError):
+        pool.admit(0, np.arange(2, 8, dtype=np.int32), 4)  # slot occupied
+
+
+def test_release_is_idempotent():
+    cfg = get_config("deepseek-7b").reduced().with_(kv_layout="paged", page_size=4)
+    pool = PagedKVPool(cfg, 1, 2, max_len=32)
+    pool.release(1)  # never-admitted slot: no-op
+    pool.admit(0, np.arange(2, 12, dtype=np.int32), 6)
+    pool.ensure_writable(0, 9)
+    pool.advance(0, 9)
+    pool.release(0)
+    pool.release(0)  # double-release must not double-free / go negative
+    pool.check_invariants()
+    assert pool.alloc.free_count == pool.alloc.n_pages - 1
+    assert pool.alloc.reserved == 0
+
+
+# ---- victim selection --------------------------------------------------------
+
+
+def test_select_victim_policy():
+    # (slot, priority, n_generated, shared_donor)
+    assert select_victim([(0, 1, 0, False), (1, 0, 9, True)]) == 1   # priority first
+    assert select_victim([(0, 0, 3, True), (1, 0, 9, False)]) == 1   # non-donor next
+    assert select_victim([(0, 0, 5, False), (1, 0, 2, False)]) == 1  # fewest generated
+    assert select_victim([(2, 0, 4, False), (1, 0, 4, False)]) == 1  # slot tiebreak
+
+
+# ---- deadlines / cancellation / shedding ------------------------------------
+
+
+@pytest.mark.parametrize("scheduler", ["static", "continuous"])
+def test_deadline_expired_resolves_typed(deepseek_lm, scheduler):
+    lm, params = deepseek_lm
+    eng = ServeEngine(
+        lm, params, batch_size=2, max_len=64, scheduler=scheduler, page_size=16
+    )
+    vocab = lm.cfg.vocab
+    res = eng.generate(
+        _reqs(vocab, 2, deadline_s=lambda i: 0.0 if i == 0 else None)
+    )
+    assert res[0].status == "deadline"
+    assert res[0].steps < 8  # retired early, partial tokens only
+    assert res[1].status == "ok" and res[1].steps == 8
+    assert eng.obs.value("serve.deadline_miss") == 1
+
+
+@pytest.mark.parametrize("scheduler", ["static", "continuous"])
+def test_cancel_before_start(deepseek_lm, scheduler):
+    lm, params = deepseek_lm
+    eng = ServeEngine(
+        lm, params, batch_size=2, max_len=64, scheduler=scheduler, page_size=16
+    )
+    eng.cancel(1)
+    res = eng.generate(_reqs(lm.cfg.vocab, 3))
+    assert [r.status for r in res] == ["ok", "cancelled", "ok"]
+    assert res[1].steps == 0 and len(res[1].tokens) == 0
+    assert eng.obs.value("serve.cancelled") == 1
+    # The cancel set is consumed: a fresh stream serves rid 1 normally.
+    res2 = eng.generate(_reqs(lm.cfg.vocab, 3))
+    assert all(r.status == "ok" for r in res2)
+
+
+def test_load_shed_over_bounded_queue(deepseek_lm):
+    lm, params = deepseek_lm
+    eng = ServeEngine(
+        lm, params, batch_size=2, max_len=64, scheduler="continuous",
+        page_size=16, max_queue=1,
+    )
+    res = eng.generate(_reqs(lm.cfg.vocab, 6))
+    by = {s: [r.rid for r in res if r.status == s] for s in REQUEST_STATUSES}
+    # 2 slots admit, 1 queues; the 3 newest arrived are shed.
+    assert by["shed"] == [3, 4, 5]
+    assert by["ok"] == [0, 1, 2]
+    assert all(len(res[i].tokens) == 0 for i in by["shed"])
+    assert eng.obs.value("serve.shed") == 3
+    assert eng.last_stats.shed == 3
+
+
+# ---- preemption / restore ----------------------------------------------------
+
+# Oversubscription geometry shared by the preemption tests: page 16,
+# max_len 64 (4-page rows), 24-token prompts growing by 24 -> 3 pages
+# worst case per request, but only 4 allocatable pages for 2 slots.
+_GEO = dict(batch_size=2, max_len=64, scheduler="continuous", page_size=16,
+            prefill_chunk=16, pool_pages=4)
+
+
+def test_preempt_restore_greedy_bitwise_parity(deepseek_lm):
+    lm, params = deepseek_lm
+    vocab = lm.cfg.vocab
+    ref = ServeEngine(lm, params, **{**_GEO, "pool_pages": None})
+    res_ref = ref.generate(_reqs(vocab, 3, max_new=24))
+    eng = ServeEngine(
+        lm, params, **_GEO, admission="optimistic", max_preemptions=10
+    )
+    res = eng.generate(_reqs(vocab, 3, max_new=24))
+    st = eng.last_stats
+    assert st.preemptions >= 1 and st.restore_tokens > 0
+    assert sum(r.n_preemptions for r in res) == st.preemptions
+    for a, b in zip(res_ref, res):
+        assert b.status == "ok"
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    # Restores re-prefill through the same two compiled step widths.
+    assert eng.compiled_step_count() == 2
+    assert eng.obs.value("serve.preemptions") == st.preemptions
+    assert eng.obs.value("serve.restore_tokens") == st.restore_tokens
+    eng.last_pool.check_invariants()
+
+
+def test_max_preemptions_zero_fails_typed(deepseek_lm):
+    lm, params = deepseek_lm
+    eng = ServeEngine(
+        lm, params, **_GEO, admission="optimistic", max_preemptions=0
+    )
+    res = eng.generate(_reqs(lm.cfg.vocab, 3, max_new=24))
+    by = {r.rid: r.status for r in res}
+    assert set(by.values()) <= {"ok", "failed"}
+    assert "failed" in by.values()  # first preemption hits the 0 bound
+    assert eng.obs.value("serve.failed") >= 1
+    # The stream still completed — no raise, every request resolved.
+    assert len(res) == 3
+
+
+def test_request_priority_shields_victim_choice(deepseek_lm):
+    lm, params = deepseek_lm
+    eng = ServeEngine(
+        lm, params, **_GEO, admission="optimistic", max_preemptions=10
+    )
+    # rid 0 runs at higher priority: under pressure the victim must be the
+    # lower-priority row, so rid 0 finishes with zero preemptions.
+    res = eng.generate(
+        _reqs(lm.cfg.vocab, 2, max_new=24,
+              priority=lambda i: 1 if i == 0 else 0)
+    )
+    assert eng.last_stats.preemptions >= 1
+    assert res[0].n_preemptions == 0
+    assert all(r.status == "ok" for r in res)
+
+
+def test_admit_watermark_pauses_admission(deepseek_lm):
+    lm, params = deepseek_lm
+    eng = ServeEngine(
+        lm, params, **_GEO, admission="optimistic", max_preemptions=10,
+        admit_watermark=0.5,
+    )
+    # Defaults: reserve never pauses (1.0), optimistic pauses at 0.9.
+    assert ServeEngine(lm, params, **_GEO)._watermark == 1.0
+    assert ServeEngine(
+        lm, params, **_GEO, admission="optimistic"
+    )._watermark == 0.9
+    res = eng.generate(_reqs(lm.cfg.vocab, 3, max_new=24))
+    assert all(r.status == "ok" for r in res)
+    # Admission-paused is a last-value gauge: it exists, and by stream end
+    # the pool has drained so it must read un-paused again.
+    assert eng.obs.value("serve.admission_paused") == 0.0
+
+
+def test_engine_rejects_unknown_admission(deepseek_lm):
+    lm, params = deepseek_lm
+    with pytest.raises(AdmissionError):
+        ServeEngine(lm, params, scheduler="continuous", admission="bogus")
+
+
+# ---- pool lifecycle random walk (property test) ------------------------------
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**16))
+def test_pool_lifecycle_random_walk(seed):
+    """Random walk over the resilience lifecycle on an *oversubscribed*
+    optimistic pool: admit / decode-step / cancel-release / natural
+    ``PoolExhausted`` answered by victim release (preemption) / restore of
+    a preempted prompt+generated stream / deadline-expire release.
+
+    Invariants after every op (``check_invariants``) plus token
+    conservation: the host mirror of every live slot's length matches the
+    walk's own accounting, and a fully drained pool returns to all-free,
+    zero-reserved."""
+    cfg = get_config("deepseek-7b").reduced().with_(kv_layout="paged", page_size=4)
+    rng = np.random.default_rng(seed)
+    n_slots = 3
+    pool = PagedKVPool(
+        cfg, 1, n_slots, max_len=32, admission="optimistic", n_pages=13
+    )
+    live: dict[int, dict] = {}    # slot -> {len, total}
+    preempted: list[dict] = []    # restorable: {prompt_len, done}
+
+    def admit(slot, prompt_len, max_new):
+        prompt = rng.integers(2, 5, size=prompt_len).astype(np.int32)
+        if pool.admit(slot, prompt, max_new) is None:
+            return False
+        live[slot] = {
+            "len": int(pool.lens[slot]),
+            "total": min(prompt_len + max_new, pool.capacity),
+        }
+        return True
+
+    for _ in range(80):
+        op = rng.integers(0, 5)
+        free = [s for s in range(n_slots) if s not in live]
+        if op == 0 and free:  # fresh admission
+            admit(int(rng.choice(free)), int(rng.integers(1, 20)),
+                  int(rng.integers(1, 12)))
+        elif op == 1 and live:  # decode/prefill step on one slot
+            slot = int(rng.choice(list(live)))
+            n = int(rng.integers(1, 5))
+            n = min(n, live[slot]["total"] - live[slot]["len"])
+            if n <= 0:
+                continue
+            try:
+                pool.ensure_writable(slot, n)
+            except PoolExhausted:
+                # Preempt a victim (possibly the failing slot itself);
+                # its stream becomes restorable.
+                victim = select_victim(
+                    [(s, 0, live[s]["len"], pool.shared_donor(s))
+                     for s in live]
+                )
+                preempted.append({"state": live.pop(victim)})
+                pool.release(victim)
+                pool.check_invariants()
+                continue
+            pool.advance(slot, n)
+            live[slot]["len"] += n
+        elif op == 2 and live:  # cancel / deadline-expire: release
+            slot = int(rng.choice(list(live)))
+            del live[slot]
+            pool.release(slot)
+        elif op == 3 and preempted and free:  # restore = re-admission
+            ent = preempted.pop()
+            st_ = ent["state"]
+            # Chunked re-prefill readmits prompt+generated as the prompt.
+            admit(int(rng.choice(free)), max(st_["len"], 1),
+                  max(st_["total"] - st_["len"], 1))
+        pool.check_invariants()
+        for slot, st_ in live.items():
+            assert int(pool.lens[slot]) == st_["len"]  # token conservation
+
+    for slot in list(live):
+        pool.release(slot)
+    pool.check_invariants()
+    assert pool.alloc.free_count == pool.alloc.n_pages - 1
+    assert pool.alloc.reserved == 0
