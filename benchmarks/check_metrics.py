@@ -15,7 +15,9 @@ Checks:
   required series exist: TTFT/TPOT histograms, per-kind token counters
   (decode AND prefill), pool occupancy + prefix-sharing gauges/counters,
   the resilience counters (preemptions / restore tokens / shed /
-  deadline misses / cancels) and admission-paused gauge,
+  deadline misses / cancels) and admission-paused gauge, the ``tier.*``
+  tiering counters/gauges (with ``tier.prefetch_hits + tier.prefetch_wasted
+  == tier.fetches`` — prefetch conservation),
   and ``llc.modeled_miss_bytes`` gauges for >= 2 distinct traversal orders;
   histogram lines carry consistent buckets (cumulative, ending at +Inf,
   count == last cumulative).
@@ -48,6 +50,12 @@ REQUIRED_COUNTER_SERIES = (
     ("serve.shed", {}),
     ("serve.deadline_miss", {}),
     ("serve.cancelled", {}),
+    # Tiering counters (DESIGN.md §13): pre-created at engine start like
+    # the resilience series, so an untiered run still carries them at 0.
+    ("tier.spills", {}),
+    ("tier.fetches", {}),
+    ("tier.prefetch_hits", {}),
+    ("tier.prefetch_wasted", {}),
 )
 REQUIRED_GAUGES = (
     "pool.occupancy_frac",
@@ -57,12 +65,20 @@ REQUIRED_GAUGES = (
     "serve.budget_utilization",
     "serve.current_order",
     "serve.admission_paused",
+    "tier.host_pages",
+    "tier.device_pages",
+    "tier.overlap_frac",
     "llc.footprint_bytes",
 )
 MIN_LLC_ORDERS = 2
 
 
-def check_metrics(path: str, errors: list, min_order_switches: int = 0) -> None:
+def check_metrics(
+    path: str,
+    errors: list,
+    min_order_switches: int = 0,
+    min_prefetch_hits: int = 0,
+) -> None:
     try:
         with open(path) as f:
             lines = [json.loads(ln) for ln in f if ln.strip()]
@@ -119,6 +135,26 @@ def check_metrics(path: str, errors: list, min_order_switches: int = 0) -> None:
                 f"smoke requires >= {min_order_switches} order switch(es)"
             )
 
+    # Prefetch conservation (DESIGN.md §13): every page the prefetcher
+    # fetched is eventually attended (hit) or released unused (wasted) —
+    # a drained run must balance exactly.
+    def cval(name):
+        rec = by_kind["counter"].get((name, ()))
+        return rec.get("value", 0) if rec else 0
+
+    fetches = cval("tier.fetches")
+    hits, wasted = cval("tier.prefetch_hits"), cval("tier.prefetch_wasted")
+    if hits + wasted != fetches:
+        errors.append(
+            f"{path}: prefetch accounting drift: tier.prefetch_hits ({hits}) "
+            f"+ tier.prefetch_wasted ({wasted}) != tier.fetches ({fetches})"
+        )
+    if min_prefetch_hits > 0 and hits < min_prefetch_hits:
+        errors.append(
+            f"{path}: tier.prefetch_hits = {hits} — the tiering smoke "
+            f"requires >= {min_prefetch_hits} prefetch hit(s)"
+        )
+
     for (name, labels), rec in by_kind["histogram"].items():
         buckets = rec.get("buckets", [])
         if not buckets or buckets[-1][0] != "+Inf":
@@ -170,10 +206,18 @@ def main() -> int:
     ap.add_argument("--min-order-switches", type=int, default=0, metavar="N",
                     help="require the serve.order_switches counter to be "
                          ">= N (the --attn-order auto adaptation smoke)")
+    ap.add_argument("--min-prefetch-hits", type=int, default=0, metavar="N",
+                    help="require the tier.prefetch_hits counter to be "
+                         ">= N (the --host-pages tiering smoke)")
     args = ap.parse_args()
 
     errors: list[str] = []
-    check_metrics(args.metrics, errors, min_order_switches=args.min_order_switches)
+    check_metrics(
+        args.metrics,
+        errors,
+        min_order_switches=args.min_order_switches,
+        min_prefetch_hits=args.min_prefetch_hits,
+    )
     check_trace(args.trace, errors)
     if errors:
         print(f"check_metrics: {len(errors)} violation(s):")

@@ -29,6 +29,16 @@ Two request streams through the ServeEngine on CPU:
   and a seeded chaos ``FaultPlan`` (injected pool exhaustion + a transient
   device-step failure + a mid-prefill cancel) must finish with zero
   uncaught exceptions, exactly one step retry, and clean pool invariants.
+* ``long_context`` — the tiered KV memory layer (DESIGN.md §13) with the
+  device pool sized under half the working set. The same long-prompt
+  stream through a preempt-only engine (restores by chunked re-prefill —
+  paying the prompt's prefill compute again on every restore) and a
+  tiered one (spills victim pages to a host store, prefetches them back
+  in the traversal's future visit order). Asserted: bitwise token parity
+  with an unconstrained reference on both engines, >= 1 spill and zero
+  tiered preemptions, prefetch hit rate >= 0.8, and modeled device work
+  (padded step slots + copy-charged tier traffic — deterministic, unlike
+  CI wall clock) >= 1.5x better than preempt-only.
 
 ``--scenario`` picks one scenario (CI's chaos smoke runs
 ``--quick --scenario overload``); the default runs them all.
@@ -433,6 +443,195 @@ def overload_scenario(jax, np, *, lm, params, vocab, quick: bool) -> dict:
     }
 
 
+def long_context_scenario(jax, np, *, arch: str, quick: bool) -> dict:
+    """Tiered KV memory under device-pool pressure (DESIGN.md §13).
+
+    The device pool is sized to under half the batch's concurrent working
+    set — the regime the host tier exists for. Three engines on the same
+    greedy stream:
+
+    * reference — unconstrained pool, never preempts or spills: the
+      bitwise token oracle.
+    * preempt-only — optimistic admission over the constrained pool with
+      no host tier. Every exhaustion evicts a victim whose KV is
+      *discarded*; the restore re-runs chunked prefill over the full
+      prompt plus everything generated so far, so the prompt's compute is
+      paid again (and again) under sustained pressure.
+    * tiered — same constrained pool plus a host page store. Pressure
+      spills a victim's pages to host rows (ref-decrement, no recompute);
+      the resume path stages the rows back with async ``device_put`` in
+      the sawtooth traversal's future visit order, overlapped behind the
+      in-flight step, and splices them in atomically at a boundary.
+
+    The model is rebuilt wider than the shared smoke config on purpose:
+    the comparison is about *restore re-prefill compute*, which a
+    dispatch-overhead-bound toy model would hide.
+
+    The asserted throughput metric is **modeled device work**, not wall
+    clock (same philosophy as ``order_adaptation``'s modeled miss bytes —
+    deterministic, stable across hosts): each compiled step executes its
+    full padded width, so a narrow step costs ``batch`` token-slots and a
+    wide step ``batch * prefill_chunk``; tier traffic is charged at
+    ``COPY_COST`` token-slots per KV token moved (PCIe/C2C page copies
+    run an order of magnitude cheaper than recomputing the same tokens —
+    on GB10-class unified memory the real gap is wider still). Wall-clock
+    tokens/s is measured and reported alongside, but CI boxes are too
+    noisy to gate on it.
+
+    Asserted: both constrained engines match the reference bitwise with
+    two compiled widths; the tiered engine spills (>= 1) and never
+    preempts, its prefetch hit rate is >= 0.8 (pages staged ahead of the
+    resume that consumes them), and its modeled-work speedup over
+    preempt-only is >= 1.5x — the gap is exactly the re-prefill compute
+    the host tier avoids.
+    """
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve import Request, ServeEngine
+
+    page, chunk, batch = 16, 8, 8
+    prompt_len, max_new = 96, 128
+    n_req = 6 if quick else 8
+    pages_per_req = -(-(prompt_len + max_new) // page)
+    ws = min(batch, n_req) * pages_per_req
+    pool = 48 if not quick else 36      # device tier: < 50% of working set
+    host = ws                           # host tier: holds the full working set
+    max_len = prompt_len + max_new
+    COPY_COST = 1 / 8                   # token-slots per KV token copied
+
+    cfg = get_config(arch).reduced().with_(
+        d_model=320, n_layers=6, n_heads=8, head_dim=40, d_ff=1280
+    )
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    def make():
+        rng = np.random.default_rng(9)
+        return [
+            Request(
+                tokens=rng.integers(2, cfg.vocab, size=prompt_len).astype(
+                    np.int32
+                ),
+                max_new_tokens=max_new,
+                rid=i,
+            )
+            for i in range(n_req)
+        ]
+
+    def engine(**kw):
+        return ServeEngine(
+            lm, params, batch_size=batch, max_len=max_len,
+            scheduler="continuous", page_size=page, prefill_chunk=chunk, **kw,
+        )
+
+    def run(eng, repeats):
+        eng.generate(make())            # warm-up: compile both step widths
+        v = eng.obs.value
+        w0 = v("serve.steps", width="wide")
+        n0 = v("serve.steps", width="narrow")
+        best, results = None, None
+        for _ in range(repeats):        # best-of-N wall clock; counters are
+            t0 = time.time()            # deterministic per repeat
+            res = eng.generate(make())
+            dt = time.time() - t0
+            if best is None or dt < best:
+                best, results = dt, res
+        wide = int(round((v("serve.steps", width="wide") - w0) / repeats))
+        narrow = int(round((v("serve.steps", width="narrow") - n0) / repeats))
+        return best, results, wide, narrow
+
+    ref = engine()                      # unconstrained: the bitwise oracle
+    _, res_ref, _, _ = run(ref, repeats=1)
+
+    pre = engine(admission="optimistic", max_preemptions=400, pool_pages=pool)
+    t_pre, res_pre, wide_pre, narrow_pre = run(pre, repeats=2)
+    st_pre = pre.last_stats
+    assert st_pre.preemptions >= 1, "constrained pool never pressured preempt"
+
+    tier = engine(
+        admission="optimistic", max_preemptions=400, pool_pages=pool,
+        host_pages=host, prefetch_depth=8, spill_watermark=1.0,
+    )
+    t_tier, res_tier, wide_tier, narrow_tier = run(tier, repeats=2)
+    st = tier.last_stats
+    tpool = tier.last_pool
+    assert st.spills >= 1, "constrained pool never pressured the tiered engine"
+    assert st.preemptions == 0, "host tier failed to absorb the pressure"
+    hit_rate = st.prefetch_hits / max(st.tier_fetches, 1)
+    assert hit_rate >= 0.8, f"prefetch hit rate {hit_rate:.2f} < 0.8"
+
+    for a, b, c in zip(res_ref, res_pre, res_tier):
+        assert a.status == b.status == c.status == "ok"
+        assert (a.tokens == b.tokens).all(), f"rid {a.rid}: preempt diverged"
+        assert (a.tokens == c.tokens).all(), f"rid {a.rid}: tiered diverged"
+
+    # Modeled device work (token-slots): padded step execution + copies.
+    page_bytes = tpool.fetch_bytes // max(tpool.fetches, 1)
+    pages_moved = tpool.fetches + tpool.spill_bytes // max(page_bytes, 1)
+    work_pre = batch * (narrow_pre + chunk * wide_pre)
+    work_tier = (
+        batch * (narrow_tier + chunk * wide_tier)
+        + pages_moved * page * COPY_COST
+    )
+    modeled_speedup = round(work_pre / work_tier, 3)
+    assert modeled_speedup >= 1.5, (
+        f"tiered modeled-work speedup only {modeled_speedup}x"
+    )
+
+    tokens = sum(r.steps for r in res_tier)
+    tps_pre = tokens / t_pre if t_pre > 0 else float("inf")
+    tps_tier = tokens / t_tier if t_tier > 0 else float("inf")
+
+    return {
+        "page_size": page,
+        "max_len": max_len,
+        "prompt_len": prompt_len,
+        "max_new": max_new,
+        "prefill_chunk": chunk,
+        "batch_size": batch,
+        "requests": n_req,
+        "pool_pages": pool,
+        "host_pages": host,
+        "working_set_pages": ws,
+        "device_frac_of_working_set": round(pool / ws, 3),
+        "copy_cost_per_kv_token": COPY_COST,
+        "tokens": tokens,
+        "preempt_only": {
+            "tok_per_s": round(tps_pre, 2),
+            "seconds": round(t_pre, 4),
+            "preemptions": st_pre.preemptions,
+            "restore_tokens": st_pre.restore_tokens,
+            "wide_steps": wide_pre,
+            "narrow_steps": narrow_pre,
+            "modeled_work_token_slots": work_pre,
+        },
+        "tiered": {
+            "tok_per_s": round(tps_tier, 2),
+            "seconds": round(t_tier, 4),
+            "spills": st.spills,
+            "fetches": st.tier_fetches,
+            "prefetch_hits": st.prefetch_hits,
+            "prefetch_wasted": st.prefetch_wasted,
+            "prefetch_hit_rate": round(hit_rate, 3),
+            "spill_bytes": tpool.spill_bytes,
+            "fetch_bytes": tpool.fetch_bytes,
+            "overlapped_fetch_frac": round(
+                tpool._overlapped / max(tpool.fetches, 1), 3
+            ),
+            "preemptions": st.preemptions,
+            "wide_steps": wide_tier,
+            "narrow_steps": narrow_tier,
+            "modeled_work_token_slots": round(work_tier, 1),
+        },
+        "modeled_speedup_vs_preempt_only": modeled_speedup,
+        "wall_clock_speedup_vs_preempt_only": round(
+            tps_tier / max(tps_pre, 1e-9), 3
+        ),
+        "token_parity": True,
+        "compiled_steps": tier.compiled_step_count(),
+    }
+
+
 def _pct(xs, p):
     xs = sorted(xs)
     if not xs:
@@ -519,7 +718,7 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--scenario", default="all",
                     choices=["all", "mixed", "shared_prefix",
-                             "order_adaptation", "overload"],
+                             "order_adaptation", "overload", "long_context"],
                     help="run one scenario (CI chaos smoke: --quick "
                          "--scenario overload); default runs them all")
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -634,6 +833,15 @@ def main() -> None:
             jax, np, lm=lm, params=params, vocab=cfg.vocab, quick=args.quick
         )
 
+    if on("long_context"):
+        # Tiered KV memory with the device pool under half the working set:
+        # spill-to-host + traversal-order prefetch vs discard-and-reprefill
+        # preemption (bitwise parity, hit rate, and modeled-work speedup all
+        # asserted). Builds its own wider model — see the scenario docstring.
+        report["long_context"] = long_context_scenario(
+            jax, np, arch=args.arch, quick=args.quick
+        )
+
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     if on("mixed"):
@@ -685,6 +893,23 @@ def main() -> None:
             f"{len(ch['plan'])} faults fired, {ch['step_retries']} step "
             f"retry, statuses "
             + ", ".join(f"{k}={v}" for k, v in sorted(ch["statuses"].items()))
+        )
+    if on("long_context"):
+        lc = report["long_context"]
+        t, p = lc["tiered"], lc["preempt_only"]
+        print(
+            f"long-context ({lc['pool_pages']}/{lc['working_set_pages']} "
+            f"device pages): modeled work {p['modeled_work_token_slots']} -> "
+            f"{t['modeled_work_token_slots']} token-slots "
+            f"({lc['modeled_speedup_vs_preempt_only']}x; wall clock "
+            f"{t['tok_per_s']:.1f} vs {p['tok_per_s']:.1f} tok/s = "
+            f"{lc['wall_clock_speedup_vs_preempt_only']}x); "
+            f"{t['spills']} spills, "
+            f"{t['fetches']} fetches (hit rate {t['prefetch_hit_rate']:.0%}, "
+            f"{t['overlapped_fetch_frac']:.0%} overlapped), "
+            f"{t['spill_bytes'] / 2**20:.1f}/{t['fetch_bytes'] / 2**20:.1f} "
+            f"MiB spilled/fetched vs {p['preemptions']} preemptions "
+            f"({p['restore_tokens']} tokens re-prefilled)"
         )
     if on("mixed"):
         pt = report["page_trace"]

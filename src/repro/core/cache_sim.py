@@ -39,6 +39,9 @@ __all__ = [
     "attention_trace",
     "simulate_attention",
     "reuse_distances",
+    "reuse_distance_stats",
+    "reuse_distance_percentile",
+    "slot_reuse_stats",
     "decode_page_trace",
     "simulate_paged_decode",
     "shared_prefix_decode_trace",
@@ -189,6 +192,86 @@ def reuse_distances(keys: Iterable[tuple]) -> list[int]:
         del stack[i]
         stack.insert(0, key)
     return out
+
+
+def reuse_distance_percentile(dists: Sequence[int], p: float) -> float:
+    """Nearest-rank percentile of an LRU stack-distance list (0 if empty).
+
+    ``p`` in [0, 100]. The p-th percentile distance is the smallest cache
+    capacity (in entries) at which an LRU cache hits at least ``p`` percent
+    of the stream's non-compulsory accesses — the operational reading that
+    makes these percentiles an eviction-ranking signal."""
+    if not 0.0 <= p <= 100.0:
+        raise ValueError(f"percentile {p} outside [0, 100]")
+    xs = sorted(dists)
+    if not xs:
+        return 0.0
+    i = min(len(xs) - 1, max(0, round(p / 100 * (len(xs) - 1))))
+    return float(xs[i])
+
+
+def reuse_distance_stats(dists: Sequence[int]) -> dict:
+    """Summary statistics of a :func:`reuse_distances` output.
+
+    Returns ``{"n", "mean", "p50", "p90", "max"}`` (zeros for an empty
+    list). The mean stack distance is the canonical locality figure; the
+    percentiles bound it from both sides (p50 <= mean is the skew check,
+    p90/max expose the tail that a capacity-sized LRU actually misses).
+    The tiered serve engine ranks spill victims by these stats instead of
+    plain last-touch LRU: a slot whose page stream carries the largest
+    reuse distances is the one whose pages an LLC-sized device tier was
+    going to miss anyway, so it is the cheapest resident set to lose.
+    """
+    xs = list(dists)
+    if not xs:
+        return {"n": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0, "max": 0}
+    return {
+        "n": len(xs),
+        "mean": sum(xs) / len(xs),
+        "p50": reuse_distance_percentile(xs, 50),
+        "p90": reuse_distance_percentile(xs, 90),
+        "max": max(xs),
+    }
+
+
+def slot_reuse_stats(
+    order: Order | str,
+    lens: Sequence[int],
+    page: int,
+    *,
+    n_steps: int = 2,
+    snake_group: int | None = None,
+) -> list[dict]:
+    """Per-slot :func:`reuse_distance_stats` over the interleaved decode
+    page trace of all slots stepping together.
+
+    Replays ``n_steps`` lock-step decode steps of rows with cache lengths
+    ``lens`` (:func:`decode_page_trace`), splits the stream's stack
+    distances by the slot that issued each access, and summarizes each
+    slot's share. This is the tiered pool's spill-ranking signal: the trace
+    is the measurement twin of the serve hot path, so a slot whose accesses
+    land at the largest stack distances is the slot contributing least
+    locality to the device tier — evicting (spilling) it first sacrifices
+    the fewest would-have-hit residencies. Two steps are enough to expose
+    every cross-step reuse pair; more steps only repeat the pattern.
+    """
+    trace = list(
+        decode_page_trace(order, lens, n_steps, page, snake_group=snake_group)
+    )
+    # reuse_distances skips first touches; recompute with slot attribution.
+    stack: list[tuple] = []
+    per_slot: list[list[int]] = [[] for _ in lens]
+    for key in trace:
+        slot = key[1]
+        try:
+            i = stack.index(key)
+        except ValueError:
+            stack.insert(0, key)
+            continue
+        per_slot[slot].append(i)
+        del stack[i]
+        stack.insert(0, key)
+    return [reuse_distance_stats(d) for d in per_slot]
 
 
 def decode_page_trace(

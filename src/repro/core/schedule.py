@@ -60,6 +60,7 @@ __all__ = [
     "bwd_kv_schedule",
     "kv_index",
     "kv_index_host",
+    "future_visit_window",
     "page_visit_order",
     "page_visit_order_dynamic",
     "resolve_order_group",
@@ -228,6 +229,31 @@ def page_visit_order(
     size = jnp.minimum(group, n_kv - base)
     rev = base + (size - 1) - (j - base)
     return jnp.where(p % 2 == 0, j, rev)
+
+
+def future_visit_window(
+    parity, n_kv: int, depth: int, group: int
+) -> list[int]:
+    """First ``depth`` logical pages of the *next* step's visit order.
+
+    Host-side prefetch window: ``parity`` is the current step's per-row
+    parity driver (the visited cache length, as in
+    :meth:`Traversal.visit_order`), so ``parity + 1`` is the driver of the
+    step about to run, and the returned logical page indices are exactly
+    the prefix of the walk that step will issue. ``group`` is the effective
+    reversal group from :func:`resolve_order_group` (1 = cyclic, ``n_kv`` =
+    sawtooth, g = block_snake), matching the serve engine's runtime order
+    operand — the tiered KV prefetcher fetches a suspended row's
+    host-resident pages in this order so the pages the next step touches
+    first are device-resident first. ``depth >= n_kv`` returns the full
+    permutation of the next step's walk.
+    """
+    n = int(n_kv)
+    if n <= 0:
+        return []
+    g = max(1, min(int(group), n))
+    p = int(parity) + 1
+    return [_snake_pos_host(p, j, n, g) for j in range(min(int(depth), n))]
 
 
 def step_page_visits(

@@ -30,6 +30,12 @@ load-sheds the newest arrived requests, ``--admit-watermark`` pauses
 admission under pool pressure, and ``--deadline-s`` gives every synthetic
 request a wall-clock deadline. Every request resolves with a typed
 ``status`` (ok/deadline/cancelled/shed/failed) instead of raising.
+
+Tiered KV memory (DESIGN.md §13): ``--host-pages N`` backs the device pool
+with an N-page host tier — at ``--spill-watermark`` occupancy the engine
+spills the coldest slot (largest modeled reuse distance) to the host
+instead of preempting it, and streams pages back ``--prefetch-depth`` per
+step in the traversal's visit order, overlapped with in-flight steps.
 """
 
 from __future__ import annotations
@@ -43,7 +49,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.schedule import Order
 from repro.models import build_model
-from repro.serve import Request, ServeEngine, supports_continuous
+from repro.serve import FaultPlan, Request, ServeEngine, supports_continuous
 from repro.train.checkpoint import latest_step, restore_pytree
 
 
@@ -126,6 +132,24 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="allocatable KV pool pages (default: every slot's "
                          "worst case; smaller = oversubscribed pool)")
+    ap.add_argument("--host-pages", type=int, default=None,
+                    help="host-offload page tier capacity in pages "
+                         "(DESIGN.md §13); enables the TieredPagePool so "
+                         "cold slots spill to host instead of being "
+                         "preempted (default: tiering off)")
+    ap.add_argument("--spill-watermark", type=float, default=None,
+                    help="device-pool occupancy fraction at which the "
+                         "coldest slot (largest modeled reuse distance) "
+                         "spills to the host tier (default: "
+                         "min(0.85, admit watermark); needs --host-pages)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="host pages staged back per step boundary while a "
+                         "spilled slot resumes, in the next step's "
+                         "traversal visit order (needs --host-pages)")
+    ap.add_argument("--chaos-fetch-fail", type=int, default=0, metavar="N",
+                    help="inject N tier.fetch faults (dropped host->device "
+                         "transfers; the prefetcher requeues and retries) — "
+                         "the CI tiering chaos smoke (needs --host-pages)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="dump the obs metrics registry as JSONL here")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -188,6 +212,14 @@ def main():
         admit_watermark=args.admit_watermark,
         max_preemptions=args.max_preemptions,
         pool_pages=args.pool_pages,
+        host_pages=args.host_pages,
+        spill_watermark=args.spill_watermark,
+        prefetch_depth=args.prefetch_depth,
+        faults=(
+            FaultPlan().fetch_fail(0, times=args.chaos_fetch_fail)
+            if args.chaos_fetch_fail > 0
+            else None
+        ),
     )
     if adapt and eng.order_ctl is not None:
         src = eng.order_ctl.seeded_from
@@ -233,6 +265,13 @@ def main():
                 f"({stats.restore_tokens} tokens re-prefilled), "
                 f"{stats.shed} shed, {stats.deadline_miss} deadline, "
                 f"{stats.cancelled} cancelled, {stats.failed} failed"
+            )
+        if stats.spills or stats.tier_fetches:
+            hit_rate = stats.prefetch_hits / max(stats.tier_fetches, 1)
+            print(
+                f"  tiering: {stats.spills} spills, {stats.tier_fetches} "
+                f"fetches (hit rate {hit_rate:.0%}, "
+                f"{stats.prefetch_wasted} wasted)"
             )
     for r in results[:4]:
         print(f"  rid={r.rid} -> {r.tokens.tolist()}")

@@ -19,6 +19,11 @@ from repro.serve.kv_pool import (
     assemble_cache_view,
 )
 from repro.serve.scheduler import ContinuousScheduler, Slot, StepItem
+from repro.serve.tiering import (
+    HostPageStore,
+    TieredPagePool,
+    select_spill_victim,
+)
 
 __all__ = [
     "ORDER_INDEX",
@@ -44,4 +49,7 @@ __all__ = [
     "ContinuousScheduler",
     "Slot",
     "StepItem",
+    "HostPageStore",
+    "TieredPagePool",
+    "select_spill_victim",
 ]

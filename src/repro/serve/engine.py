@@ -50,6 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.cache_sim import slot_reuse_stats
+from repro.core.schedule import future_visit_window
 from repro.dist import sharding as shd
 from repro.models.model import LM, build_model
 from repro.obs import LLCSampler, Registry, Tracer
@@ -63,6 +65,7 @@ from repro.serve.kv_pool import (
     assemble_cache_view,
 )
 from repro.serve.scheduler import ContinuousScheduler
+from repro.serve.tiering import TieredPagePool, select_spill_victim
 
 __all__ = [
     "Request",
@@ -169,6 +172,10 @@ class StepStats:
     deadline_miss: int = 0        # requests retired on an expired deadline
     cancelled: int = 0            # requests retired by host-side cancel()
     failed: int = 0               # requests failed (preemption bound / step)
+    spills: int = 0               # slots spilled to the host tier
+    tier_fetches: int = 0         # host pages staged back toward the device
+    prefetch_hits: int = 0        # fetched pages attended by the resumed row
+    prefetch_wasted: int = 0      # fetched pages released before being used
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -245,6 +252,9 @@ class ServeEngine:
         max_preemptions: int = 2,
         pool_pages: Optional[int] = None,
         faults: Optional[FaultPlan] = None,
+        host_pages: Optional[int] = None,
+        spill_watermark: Optional[float] = None,
+        prefetch_depth: int = 2,
     ):
         """Pass ``mesh`` (+ optional ParallelConfig) for sharded serving:
         params are placed on their TP/FSDP shardings and every step runs
@@ -301,7 +311,21 @@ class ServeEngine:
         (non-injected) pool pressure reachable. ``faults`` attaches a
         deterministic ``serve.faults.FaultPlan`` driving the no-op injection
         hooks; one transient device-step failure per step is retried once
-        before the step's rows fail."""
+        before the step's rows fail.
+
+        Tiered KV memory (DESIGN.md §13): ``host_pages > 0`` backs the
+        device pool with a ``serve.tiering.TieredPagePool`` host tier of
+        that many pages. When device occupancy reaches ``spill_watermark``
+        (default ``min(0.85, admit_watermark)``) the engine *spills* the
+        coldest slot — ranked by ``cache_sim.slot_reuse_stats``, not plain
+        LRU — to the host instead of (later) preempting it, and the
+        pressure resolution order becomes shed → spill → preempt. Resuming
+        slots stream their pages back ``prefetch_depth`` pages per step
+        boundary in the next step's traversal visit order
+        (``core.schedule.future_visit_window``), with the host→device
+        copies issued while the current mixed step is in flight; the slot
+        re-enters planning only once fully resident, so spill/resume is
+        bitwise-invisible to its token stream."""
         if scheduler not in ("static", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if admission not in ("reserve", "optimistic"):
@@ -333,6 +357,17 @@ class ServeEngine:
             admit_watermark
             if admit_watermark is not None
             else (0.9 if admission == "optimistic" else 1.0)
+        )
+        self.host_pages = host_pages
+        self.prefetch_depth = max(1, int(prefetch_depth))
+        if spill_watermark is not None and not 0.0 < spill_watermark <= 1.0:
+            raise ValueError(
+                f"spill_watermark must be in (0, 1], got {spill_watermark}"
+            )
+        self._spill_wm = (
+            spill_watermark
+            if spill_watermark is not None
+            else min(0.85, self._watermark)
         )
         self._cancelled: set[int] = set()
         # Cache capacity model, shared by validation here and the budgeting
@@ -400,6 +435,27 @@ class ServeEngine:
         self._m_failed = r.counter("serve.failed")
         self._m_retries = r.counter("serve.step_retries")
         self._m_admit_paused = r.gauge("serve.admission_paused")
+        # Tiering series (DESIGN.md §13) — likewise pre-created at zero on
+        # every engine (tiered or not), so check_metrics.py can require the
+        # full tier.* schema unconditionally. The TieredPagePool increments
+        # them; on an untiered engine they stay flat at zero.
+        for name in (
+            "tier.spills",
+            "tier.fetches",
+            "tier.prefetch_hits",
+            "tier.prefetch_wasted",
+            "tier.fetch_failures",
+            "tier.spill_bytes",
+            "tier.fetch_bytes",
+        ):
+            r.counter(name)
+        for name in (
+            "tier.host_pages",
+            "tier.device_pages",
+            "tier.suspended_slots",
+            "tier.overlap_frac",
+        ):
+            r.gauge(name)
         self.llc: Optional[LLCSampler] = None
         self.order_ctl: Optional[OrderAdaptController] = None
         if scheduler == "continuous":
@@ -701,23 +757,27 @@ class ServeEngine:
         )
         sched.submit(list(requests))
         idx_of = {id(r): i for i, r in enumerate(requests)}  # default seeds
-        pool = PagedKVPool(
-            cfg,
-            cfg.n_layers,
-            n_slots,
-            cap,
+        tiered = self.host_pages is not None and self.host_pages > 0
+        pool_kw = dict(
             prefix_sharing=self.prefix_sharing,
             registry=self.obs,
             admission=self.admission,
             n_pages=self.pool_pages,
             faults=self.faults,
         )
+        if tiered:
+            pool = TieredPagePool(
+                cfg, cfg.n_layers, n_slots, cap,
+                host_pages=self.host_pages, **pool_kw,
+            )
+        else:
+            pool = PagedKVPool(cfg, cfg.n_layers, n_slots, cap, **pool_kw)
         self.last_pool = pool  # exposed for benches/tests (sharing counters)
 
         results: dict[int, GenerationResult] = {}
         resume: dict[int, list[int]] = {}   # preempted: id(req) -> generated
         n_preempts: dict[int, int] = {}     # id(req) -> times preempted
-        tally = {"preempt": 0, "restore": 0}
+        tally = {"preempt": 0, "restore": 0, "spill": 0}
         cur = np.full((n_slots,), self.eos, np.int32)  # last sampled token
         temps = np.zeros((n_slots,), np.float32)
         seeds = np.zeros((n_slots,), np.int32)
@@ -783,6 +843,9 @@ class ServeEngine:
             )
 
         def preempt_victim() -> bool:
+            # Suspended slots are not candidates: they hold no device pages,
+            # so preempting one frees nothing (and throws away the spilled
+            # KV the tier just paid to preserve).
             cands = [
                 (
                     i,
@@ -790,13 +853,95 @@ class ServeEngine:
                     len(sched.slots[i].generated),
                     pool.shared_donor(i),
                 )
-                for i in sched.active_slots()
+                for i in sched.runnable_slots()
                 if not sched.slots[i].done
             ]
             if not cands:
                 return False
             preempt(select_victim(cands))
             return True
+
+        def spill_one(keep: int) -> bool:
+            # Spill the coldest runnable slot to the host tier, keeping at
+            # least ``keep`` runnable (the watermark pass keeps one so the
+            # stream always advances; the pressure path may go to zero —
+            # the freed pages are exactly what lets a resume complete).
+            # Shielded slots (resumed, not yet stepped) are excluded: they
+            # would waste their just-fetched pages and invite ping-pong.
+            run = [i for i in sched.runnable_slots() if not sched.slots[i].done]
+            cands = [
+                i for i in run if pool.can_spill(i) and not pool.shielded(i)
+            ]
+            if not cands or len(run) <= keep:
+                return False
+            stats = slot_reuse_stats(
+                self.order_ctl.order.value,
+                [int(l) for l in pool.lens],
+                pool.page,
+                snake_group=self.order_ctl.snake_group,
+            )
+            victim = select_spill_victim(
+                [
+                    (
+                        i,
+                        getattr(sched.slots[i].request, "priority", 0),
+                        pool.shared_donor(i),
+                        stats[i]["mean"],
+                    )
+                    for i in cands
+                ]
+            )
+            if victim is None or not pool.spill_slot(victim):
+                return False  # host full / injected tier.spill stall
+            sched.suspend(victim)
+            tally["spill"] += 1
+            tr.instant(
+                "serve.spill", slot=victim,
+                pages=pool._offslot_pages(victim),
+            )
+            return True
+
+        def tier_boundary() -> None:
+            # Per-boundary tier work, in resolution order (DESIGN.md §13):
+            # splice finished resumes back in, spill down to the watermark,
+            # then open the fetch queue of (at most) one suspended slot —
+            # pages stream back in the next step's traversal visit order.
+            for i in pool.suspended_slots():
+                if pool.resume_ready(i) and pool.complete_resume(i):
+                    sched.resume(i)
+                    tr.instant("serve.tier_resume", slot=i)
+            while pool.occupancy() >= self._spill_wm and spill_one(keep=1):
+                pass
+            suspended = pool.suspended_slots()
+            if not suspended or any(
+                pool._suspended[i].started for i in suspended
+            ):
+                return
+            runnable = [
+                i for i in sched.runnable_slots() if not sched.slots[i].done
+            ]
+            n_alloc = pool.alloc.n_pages - 1
+            held = n_alloc - pool.alloc.free_count
+            for i in suspended:  # oldest slot index: deterministic FIFO-ish
+                n_pgs = pool._offslot_pages(i)
+                # Resume only into calm (a resume that immediately pushes
+                # occupancy back over the spill watermark just rotates the
+                # pressure onto a different victim — park instead, and let
+                # running work finish at full width) — unless nothing is
+                # runnable, where a resume is the only way to make progress.
+                calm = (held + n_pgs) / max(n_alloc, 1) < self._spill_wm
+                if pool.alloc.available >= pool.resume_need(i) and (
+                    calm or not runnable
+                ):
+                    group = self.order_ctl.effective_group(max(n_pgs, 1))
+                    pool.start_resume(
+                        i,
+                        order=future_visit_window(
+                            int(pool.lens[i]) // pool.page, n_pgs,
+                            n_pgs, group,
+                        ),
+                    )
+                    break
 
         tr = self.tracer
         step_fn = self._mixed_step_fn()
@@ -829,6 +974,12 @@ class ServeEngine:
                     r = sched.slots[i].request
                     if r.deadline_s is not None and now_s > r.deadline_s:
                         finish(i, "deadline")
+
+                # Tiered KV boundary work BEFORE admission: spilling down to
+                # the spill watermark is what un-pauses admission under the
+                # (higher) admit watermark — park cold work, keep admitting.
+                if tiered:
+                    tier_boundary()
 
                 # Admission: fill free slots with arrived requests while the
                 # pool can reserve their (sharing-reduced) worst case. The
@@ -879,10 +1030,13 @@ class ServeEngine:
 
                 # Plan under pressure: make every planned row writable; a
                 # mid-step PoolExhausted (optimistic oversubscription or an
-                # injected fault) preempts one victim and re-plans. Each
-                # retry removes one active slot — the victim may be the very
-                # slot that failed — so this terminates. ensure_writable is
-                # idempotent; re-ensured rows are no-ops on retry.
+                # injected fault) resolves shed → spill → preempt: spilling
+                # a victim to the host tier preserves its KV (resume is a
+                # memcpy), preemption is the fallback that throws work away.
+                # Each retry removes one runnable slot — the victim may be
+                # the very slot that failed — so this terminates.
+                # ensure_writable is idempotent; re-ensured rows are no-ops
+                # on retry.
                 while True:
                     with tr.span("serve.plan_step"):
                         plan = sched.plan_step()
@@ -892,6 +1046,8 @@ class ServeEngine:
                         for it in plan:
                             pool.ensure_writable(it.slot, it.q_len)
                     except PoolExhausted:
+                        if tiered and spill_one(keep=0):
+                            continue
                         if not preempt_victim():
                             raise
                         continue
@@ -899,6 +1055,19 @@ class ServeEngine:
                 self._m_queue.set(len(sched.waiting))
                 self._m_active.set(len(sched.active_slots()))
                 if not plan:
+                    if tiered and pool.suspended_slots():
+                        # Nothing runnable, but suspended work exists: spend
+                        # the boundary streaming pages back (nothing to
+                        # overlap with — the fetches count as un-overlapped)
+                        # and come back; complete_resume at the next
+                        # boundary returns the slot to planning.
+                        with tr.span("serve.prefetch", overlapped=False):
+                            for i in pool.suspended_slots():
+                                pool.issue_fetches(
+                                    i, self.prefetch_depth, overlapped=False
+                                )
+                        step += 1
+                        continue
                     if sched.waiting:
                         nxt = sched.next_arrival()
                         step = max(step + 1, nxt if nxt is not None else step + 1)
@@ -931,6 +1100,15 @@ class ServeEngine:
                 # a retry re-runs the identical computation: one transient
                 # failure is retried once, a second failure fails the
                 # step's rows cleanly and the engine moves on.
+                # Suspended rows keep their logical length host-side for the
+                # resume, but the step operand sees 0: their block-table row
+                # is dummied out, and a len>0 row over dummy pages is a
+                # shape the kernels never needed to define.
+                lens_op = pool.lens
+                if tiered and pool.suspended_slots():
+                    lens_op = pool.lens.copy()
+                    lens_op[pool.suspended_slots()] = 0
+
                 def dispatch():
                     if self.faults is not None:
                         self.faults.raise_if("device.step")
@@ -940,7 +1118,7 @@ class ServeEngine:
                             jnp.asarray(tokens),
                             pool.pages,
                             pool.block_tables,
-                            pool.lens,
+                            lens_op,
                             qlens,
                             np.int32(
                                 self.order_ctl.effective_group(
@@ -951,6 +1129,18 @@ class ServeEngine:
                             seeds,
                             counts,
                         )
+                    if tiered and pool.fetch_backlog():
+                        # Overlap the prefetch with the in-flight step: the
+                        # async device_put H2D copies queue up behind the
+                        # dispatched step, and the np.asarray force below
+                        # only blocks on the step's own outputs. Staged rows
+                        # are spliced at a later boundary — never into the
+                        # pages this step is reading.
+                        with tr.span("serve.prefetch", overlapped=True):
+                            for i in pool.suspended_slots():
+                                pool.issue_fetches(
+                                    i, self.prefetch_depth, overlapped=True
+                                )
                     return np.asarray(toks_dev), pages
 
                 with tr.span(
@@ -1041,6 +1231,10 @@ class ServeEngine:
             deadline_miss=by_status.get("deadline", 0),
             cancelled=by_status.get("cancelled", 0),
             failed=by_status.get("failed", 0),
+            spills=getattr(pool, "spills", 0),
+            tier_fetches=getattr(pool, "fetches", 0),
+            prefetch_hits=getattr(pool, "prefetch_hits", 0),
+            prefetch_wasted=getattr(pool, "prefetch_wasted", 0),
         )
         return [results[id(r)] for r in requests]
 

@@ -26,6 +26,10 @@ Sites:
 * ``"device.step"``   — the engine's mixed-step dispatch raises ``StepFault``
   (retried once before the step's rows are failed).
 * ``"cancel"``        — the engine host-cancels ``rid`` at the step boundary.
+* ``"tier.spill"``    — ``TieredPagePool.spill_slot`` refuses (host writer
+  stalled); the engine falls back to preemption.
+* ``"tier.fetch"``    — one host→device page fetch fails; the prefetcher
+  requeues the page and retries at the next step boundary.
 
 ``FaultPlan.random(seed, ...)`` derives a small reproducible chaos schedule
 from a seed — the CI chaos smoke runs one fixed seed so a red job is
@@ -41,7 +45,14 @@ import numpy as np
 
 __all__ = ["Fault", "FaultPlan", "StepFault", "FAULT_SITES"]
 
-FAULT_SITES = ("pool.alloc", "pool.admit", "device.step", "cancel")
+FAULT_SITES = (
+    "pool.alloc",
+    "pool.admit",
+    "device.step",
+    "cancel",
+    "tier.spill",
+    "tier.fetch",
+)
 
 
 class StepFault(RuntimeError):
@@ -98,6 +109,20 @@ class FaultPlan:
     def cancel(self, step: int, rid: int) -> "FaultPlan":
         """Host-cancel request ``rid`` at the ``step`` boundary."""
         return self.add(Fault("cancel", step, rid=rid, note="cancel"))
+
+    def spill_stall(self, step: int, times: int = 1) -> "FaultPlan":
+        """Make the tiered pool refuse the next ``times`` slot spills at or
+        after ``step`` (a stalled host-tier writer) — the engine's
+        shed -> spill -> preempt resolution must fall through to
+        preemption instead of wedging on the tier."""
+        return self.add(Fault("tier.spill", step, times, note="spill_stall"))
+
+    def fetch_fail(self, step: int, times: int = 1) -> "FaultPlan":
+        """Fail the next ``times`` host->device page fetches at/after
+        ``step`` (a dropped transfer). The prefetcher requeues the page —
+        the host copy is untouched — and retries at the next boundary, so
+        the suspended row resumes late but bitwise-intact."""
+        return self.add(Fault("tier.fetch", step, times, note="fetch_fail"))
 
     @classmethod
     def random(

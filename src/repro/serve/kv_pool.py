@@ -508,6 +508,14 @@ class PagedKVPool:
 
     # ---- invariants (property tests / debugging) -----------------------------
 
+    def _offslot_pages(self, slot: int) -> int:
+        """Logical pages of ``slot`` living outside its device block table.
+
+        Always 0 here; ``serve.tiering.TieredPagePool`` overrides it with
+        the slot's host-resident page count so ``check_invariants`` can
+        keep asserting full logical coverage across tiers."""
+        return 0
+
     def check_invariants(self) -> None:
         """Assert the pool's conservation + consistency invariants:
         free + distinct-held == allocatable pages, per-page refcounts equal
@@ -533,7 +541,9 @@ class PagedKVPool:
         assert self.alloc.reserved == sum(self._slot_reserved) >= 0
         for slot in range(self.n_slots):
             n_logical = -(-int(self.lens[slot]) // self.page)
-            assert len(self._slot_pages[slot]) >= n_logical
+            assert (
+                len(self._slot_pages[slot]) + self._offslot_pages(slot) >= n_logical
+            ), (slot, len(self._slot_pages[slot]), self._offslot_pages(slot), n_logical)
             for pg, pid in enumerate(self._slot_pages[slot]):
                 assert self.block_tables[slot, pg] == pid
             for pg in range(len(self._slot_pages[slot]), self.blocks_per_seq):

@@ -91,6 +91,10 @@ class ContinuousScheduler:
             raise ValueError(f"token_budget must be >= 1, got {token_budget}")
         self.waiting: list = []
         self.slots: list[Optional[Slot]] = [None] * n_slots
+        # Slots whose KV is parked on the host tier (serve.tiering): placed
+        # and alive — they count against admission and keep their Slot — but
+        # excluded from step plans until the engine resumes them.
+        self.suspended: set[int] = set()
         self._rr = 0                  # round-robin cursor over prefill slots
 
     def submit(self, requests: Sequence) -> None:
@@ -112,6 +116,14 @@ class ContinuousScheduler:
 
     def active_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def runnable_slots(self) -> list[int]:
+        """Active slots eligible for step plans (suspension filtered)."""
+        return [
+            i
+            for i, s in enumerate(self.slots)
+            if s is not None and i not in self.suspended
+        ]
 
     def next_arrival(self) -> Optional[int]:
         return getattr(self.waiting[0], "arrival", 0) if self.waiting else None
@@ -168,7 +180,7 @@ class ContinuousScheduler:
         decode_rows: list[int] = []
         prefill_rows: list[int] = []
         for i, st in enumerate(self.slots):
-            if st is None or st.done:
+            if st is None or st.done or i in self.suspended:
                 continue
             (prefill_rows if st.prefilling else decode_rows).append(i)
         items = [StepItem(i, 1, False) for i in decode_rows]
@@ -217,8 +229,18 @@ class ContinuousScheduler:
         self.slots[slot] = st
         return st
 
+    def suspend(self, slot: int) -> None:
+        """Exclude a placed slot from step plans (its KV spilled to host)."""
+        assert self.slots[slot] is not None, f"slot {slot} is empty"
+        self.suspended.add(slot)
+
+    def resume(self, slot: int) -> None:
+        """Return a suspended slot to step planning (its KV re-resident)."""
+        self.suspended.discard(slot)
+
     def retire(self, slot: int) -> Slot:
         st = self.slots[slot]
         assert st is not None
         self.slots[slot] = None
+        self.suspended.discard(slot)
         return st

@@ -62,7 +62,14 @@ def _engine(lm, params, **kw):
 def test_fault_site_validation():
     with pytest.raises(ValueError):
         Fault("pool.everything", 0)
-    assert set(FAULT_SITES) == {"pool.alloc", "pool.admit", "device.step", "cancel"}
+    assert set(FAULT_SITES) == {
+        "pool.alloc",
+        "pool.admit",
+        "device.step",
+        "cancel",
+        "tier.spill",
+        "tier.fetch",
+    }
 
 
 def test_plan_arms_by_step_and_consumes_times():

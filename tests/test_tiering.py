@@ -1,0 +1,493 @@
+"""Tiered KV memory: host-offload page tier under the device pool
+(DESIGN.md §13).
+
+Unit layer first — the bounded ``HostPageStore``, the reuse-distance spill
+victim policy and its ``cache_sim`` ranking signal, the full-slot
+spill/resume roundtrip (bitwise, through a prefix-sharing donor too) — then
+a hypothesis random walk over the cross-tier lifecycle (admit / step /
+spill / staged resume / release) holding ``check_invariants`` plus page
+conservation across both tiers, and the engine integration: a tiered
+engine under a device pool sized below the working set must spill instead
+of preempt and stay bitwise identical to an unconstrained reference, with
+the ``tier.spill`` / ``tier.fetch`` faults degrading it to preemption /
+late resume — never to divergence.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.cache_sim import slot_reuse_stats
+from repro.models import build_model
+from repro.serve import (
+    FaultPlan,
+    HostPageStore,
+    PoolExhausted,
+    Request,
+    ServeEngine,
+    TieredPagePool,
+    select_spill_victim,
+)
+
+SETTINGS = settings(max_examples=15, deadline=None)
+
+
+@pytest.fixture(scope="module")
+def deepseek_lm():
+    cfg = get_config("deepseek-7b").reduced()
+    lm = build_model(cfg)
+    return lm, lm.init(jax.random.PRNGKey(0))
+
+
+def _pool_cfg():
+    return get_config("deepseek-7b").reduced().with_(
+        kv_layout="paged", page_size=4
+    )
+
+
+def _tiered(n_pages=13, host_pages=16, n_slots=3):
+    return TieredPagePool(
+        _pool_cfg(), 1, n_slots, max_len=32, admission="optimistic",
+        n_pages=n_pages, host_pages=host_pages,
+    )
+
+
+def _fill_random(pool, seed=0):
+    """Overwrite every pool leaf with recognizable random payloads so a
+    spill/resume roundtrip has real bits to preserve."""
+    rng = np.random.default_rng(seed)
+    for name, leaf in pool.pages.items():
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            arr = rng.integers(-100, 100, size=leaf.shape)
+        else:
+            arr = rng.standard_normal(leaf.shape)
+        pool.pages[name] = jnp.asarray(arr, dtype=leaf.dtype)
+
+
+def _slot_rows(pool, slot):
+    """{leaf -> (L, n_pages, ...)} snapshot of a slot's device pages, in
+    logical page order."""
+    pids = list(pool._slot_pages[slot])
+    return {name: np.asarray(leaf)[:, pids] for name, leaf in pool.pages.items()}
+
+
+def _grow(pool, slot, n):
+    """Materialize ``n`` tokens of owned pages (allocation is lazy: admit
+    reserves, only writes allocate — this is the prefill/decode stand-in)."""
+    pool.ensure_writable(slot, n)
+    pool.advance(slot, n)
+
+
+def _resume(pool, slot, depth=2, order=None):
+    pool.start_resume(slot, order=order)
+    while not pool.resume_ready(slot):
+        assert pool.issue_fetches(slot, depth) > 0
+    assert pool.complete_resume(slot)
+
+
+def _reqs(vocab, n, *, plen=24, max_new=8):
+    rng = np.random.default_rng(5)
+    return [
+        Request(
+            tokens=rng.integers(2, vocab, size=plen).astype(np.int32),
+            max_new_tokens=max_new,
+            rid=i,
+        )
+        for i in range(n)
+    ]
+
+
+# ---- host store --------------------------------------------------------------
+
+
+def test_host_store_bounded_roundtrip():
+    store = HostPageStore(2)
+    row = {"k": np.arange(8.0).reshape(1, 8)}
+    h0 = store.put(row)
+    h1 = store.put({"k": np.ones((1, 8))})
+    assert store.used == 2 and store.free == 0
+    assert store.nbytes == 2 * row["k"].nbytes
+    with pytest.raises(PoolExhausted):
+        store.put({"k": np.zeros((1, 8))})
+    assert (store.get(h0)["k"] == row["k"]).all()
+    assert (store.pop(h1)["k"] == 1).all()
+    assert store.free == 1
+    assert store.put({"k": np.zeros((1, 8))}) not in (h0, h1)  # handles fresh
+
+    with pytest.raises(ValueError):
+        HostPageStore(0)
+
+
+# ---- spill victim policy -----------------------------------------------------
+
+
+def test_select_spill_victim_policy():
+    assert select_spill_victim([]) is None
+    # Priority dominates everything.
+    assert select_spill_victim(
+        [(0, 1, False, 99.0), (1, 0, True, 0.0)]
+    ) == 1
+    # Same priority: non-donors first (spilling a donor host-copies pages
+    # that stay device-resident for the adopters anyway).
+    assert select_spill_victim(
+        [(0, 0, True, 99.0), (1, 0, False, 1.0)]
+    ) == 1
+    # Then the LARGEST mean reuse distance — the coldest page stream.
+    assert select_spill_victim(
+        [(0, 0, False, 2.0), (1, 0, False, 7.0), (2, 0, False, 4.0)]
+    ) == 1
+    # Full tie: lowest slot index, deterministically.
+    assert select_spill_victim(
+        [(2, 0, False, 3.0), (0, 0, False, 3.0), (1, 0, False, 3.0)]
+    ) == 0
+
+
+def test_reuse_distance_ranking_is_traversal_aware():
+    """The ``cache_sim`` ranking signal on a sawtooth decode trace: the
+    boundary reversal re-touches a long row's tail pages promptly, so the
+    *short* rows are the ones whose pages only recur after the full
+    interleaved sweep — their mean LRU stack distance is strictly larger,
+    and the victim policy spills the shortest (coldest) stream first.
+    Plain last-touch LRU is blind to this: lock-step decode touches every
+    slot every step, so recency ties across all slots — as does a cyclic
+    traversal, whose per-slot distances are identical by construction."""
+    lens = [8, 16, 32]
+    stats = slot_reuse_stats("sawtooth", lens, 4)
+    means = [s["mean"] for s in stats]
+    assert means[0] > means[1] > means[2]  # sawtooth favors long tails
+    victim = select_spill_victim(
+        [(i, 0, False, m) for i, m in enumerate(means)]
+    )
+    assert victim == 0
+    # Cyclic traversal: every slot's distances tie — the ranking carries
+    # no information and the policy degrades to the deterministic index
+    # tiebreak, the same choice a recency-tied LRU would make.
+    cyc = slot_reuse_stats("cyclic", lens, 4)
+    assert len({round(s["mean"], 9) for s in cyc}) == 1
+    assert select_spill_victim(
+        [(i, 0, False, s["mean"]) for i, s in enumerate(cyc)]
+    ) == 0
+
+
+# ---- spill / resume roundtrip (unit) -----------------------------------------
+
+
+def test_spill_resume_roundtrip_bitwise():
+    pool = _tiered()
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(2, 5, size=10).astype(np.int32)
+    assert pool.admit(0, prompt, 8) is not None
+    _grow(pool, 0, len(prompt))
+    _fill_random(pool)
+    before = _slot_rows(pool, 0)
+    n_pages = len(pool._slot_pages[0])
+    len_before = int(pool.lens[0])
+    free_before = pool.alloc.free_count
+
+    assert pool.spill_slot(0)
+    pool.check_invariants()
+    assert pool.is_suspended(0) and pool.suspended_slots() == [0]
+    assert not pool.can_spill(0)                      # no double spill
+    assert pool.host.used == n_pages
+    assert int(pool.lens[0]) == len_before            # logical length kept
+    assert not pool._slot_pages[0]
+    assert pool.alloc.free_count == free_before + n_pages
+    assert pool.spill_bytes == pool.host.nbytes
+
+    # Resume in a (partial, noisy) visit order: out-of-range entries are
+    # dropped, unnamed pages follow in logical order.
+    assert pool.resume_need(0) == n_pages
+    _resume(pool, 0, depth=2, order=[n_pages - 1, 99, -1])
+    pool.check_invariants()
+    assert not pool.is_suspended(0) and pool.host.used == 0
+    after = _slot_rows(pool, 0)
+    for name in before:
+        assert np.array_equal(before[name], after[name]), name
+    assert pool.fetches == n_pages and pool.fetch_bytes == pool.spill_bytes
+
+    # First advance classifies the staged pages as prefetch hits.
+    assert pool.shielded(0)
+    pool.ensure_writable(0, 1)
+    pool.advance(0, 1)
+    assert not pool.shielded(0)
+    assert pool.prefetch_hits == n_pages and pool.prefetch_wasted == 0
+
+    pool.release(0)
+    pool.check_invariants()
+    assert pool.alloc.free_count == pool.alloc.n_pages - 1
+
+
+def test_release_while_suspended_counts_wasted():
+    pool = _tiered()
+    assert pool.admit(0, np.arange(2, 10).astype(np.int32), 4) is not None
+    _grow(pool, 0, 8)
+    assert pool.spill_slot(0)
+    pool.start_resume(0)
+    staged = pool.issue_fetches(0, 1)
+    assert staged == 1
+    pool.release(0)                    # cancelled mid-resume
+    pool.check_invariants()
+    assert pool.host.used == 0         # host copies dropped with the slot
+    assert pool.prefetch_wasted == staged
+    assert pool.fetches == pool.prefetch_hits + pool.prefetch_wasted
+
+
+def test_complete_resume_is_atomic_under_pressure():
+    pool = _tiered(n_pages=13)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(2, 200, size=n).astype(np.int32)
+               for n in (16, 20, 16)]       # distinct: no prefix adoption
+    assert pool.admit(0, prompts[0], 4) is not None
+    _grow(pool, 0, 16)
+    n = len(pool._slot_pages[0])
+    assert pool.spill_slot(0)
+    # Fill the freed device pages so the resume cannot fit.
+    assert pool.admit(1, prompts[1], 4) is not None
+    _grow(pool, 1, 20)
+    _grow(pool, 1, 4)                           # decode growth: 6th page
+    assert pool.admit(2, prompts[2], 4) is not None
+    _grow(pool, 2, 16)
+    pool.start_resume(0)
+    while pool.issue_fetches(0, 4):
+        pass
+    assert pool.resume_ready(0)
+    assert pool.alloc.available < pool.resume_need(0)
+    assert not pool.complete_resume(0)          # refused, nothing changed
+    pool.check_invariants()
+    assert pool.is_suspended(0) and pool.host.used == n
+    pool.release(2)                             # pressure clears...
+    assert pool.complete_resume(0)              # ...same call now lands
+    pool.check_invariants()
+    assert len(pool._slot_pages[0]) == n and pool.host.used == 0
+
+
+def test_spill_donor_keeps_serving_adopters():
+    """Spilling a prefix donor host-copies its pages and ref-decrements:
+    the adopter keeps attending the same physical pages, and the donor
+    resumes onto private copies with identical bits."""
+    pool = _tiered()
+    prompt = np.arange(2, 10).astype(np.int32)  # 2 full pages: registrable
+    assert pool.admit(0, prompt, 4) is not None
+    _grow(pool, 0, len(prompt))
+    pool.register_prompt(0, prompt)              # publish the frozen pages
+    _fill_random(pool)
+    assert pool.admit(1, prompt, 4) is not None  # adopts the donor's pages
+    shared = set(pool._slot_pages[0]) & set(pool._slot_pages[1])
+    assert shared, "prefix adoption did not share pages"
+    donor_rows = _slot_rows(pool, 0)
+    adopter_before = _slot_rows(pool, 1)
+
+    assert pool.spill_slot(0)
+    pool.check_invariants()
+    for pid in shared:
+        assert pool._ref[pid] >= 1     # decremented, not freed
+    for name in adopter_before:        # adopter bitwise untouched
+        assert np.array_equal(adopter_before[name], _slot_rows(pool, 1)[name])
+
+    _resume(pool, 0)
+    pool.check_invariants()
+    resumed = _slot_rows(pool, 0)
+    for name in donor_rows:
+        assert np.array_equal(donor_rows[name], resumed[name]), name
+    # The resumed copies are private: CoW already happened via the spill.
+    assert not set(pool._slot_pages[0]) & set(pool._slot_pages[1]) or all(
+        pool._ref[p] == 1 for p in pool._slot_pages[0]
+    )
+    pool.release(0)
+    pool.release(1)
+    pool.check_invariants()
+
+
+def test_can_admit_counts_both_tiers():
+    def occupied(host_pages):
+        pool = _tiered(n_pages=8, host_pages=host_pages)
+        prompt = np.random.default_rng(1).integers(
+            2, 200, size=16
+        ).astype(np.int32)
+        assert pool.admit(0, prompt, 16) is not None
+        _grow(pool, 0, 16)                     # 4 of 8 device pages held
+        return pool
+
+    # Worst case 8 pages: overflows the device tier's 4 remaining pages,
+    # fits when the host tier can absorb the overflow via spills...
+    assert occupied(host_pages=16).can_admit(16, 16)
+    # ...and stays inadmissible when it cannot.
+    assert not occupied(host_pages=2).can_admit(16, 16)
+
+
+# ---- cross-tier lifecycle random walk ----------------------------------------
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**16))
+def test_cross_tier_lifecycle_random_walk(seed):
+    """Random walk over admit / decode-step / spill / staged resume /
+    release on an oversubscribed tiered pool. After every op the pool
+    invariants hold, and the walk's own ledger must agree with both
+    tiers: a live slot's logical length is conserved across suspend /
+    resume, suspended slots hold exactly their page count in host rows,
+    and a fully drained pool returns to all-free on both tiers with the
+    prefetch accounting balanced."""
+    rng = np.random.default_rng(seed)
+    n_slots = 3
+    pool = _tiered(n_pages=13, host_pages=10, n_slots=n_slots)
+    live: dict[int, dict] = {}    # slot -> {len, total}
+
+    def suspended(slot):
+        return pool.is_suspended(slot)
+
+    for _ in range(80):
+        op = rng.integers(0, 6)
+        free = [s for s in range(n_slots) if s not in live]
+        active = [s for s in live if not suspended(s)]
+        if op == 0 and free:
+            slot = int(rng.choice(free))
+            prompt_len = int(rng.integers(1, 20))
+            prompt = rng.integers(2, 5, size=prompt_len).astype(np.int32)
+            max_new = int(rng.integers(1, 12))
+            if pool.admit(slot, prompt, max_new) is not None:
+                live[slot] = {
+                    "len": int(pool.lens[slot]),
+                    "total": min(prompt_len + max_new, pool.capacity),
+                }
+        elif op == 1 and active:     # decode growth, spill on pressure
+            slot = int(rng.choice(active))
+            n = min(int(rng.integers(1, 5)),
+                    live[slot]["total"] - live[slot]["len"])
+            if n <= 0:
+                continue
+            try:
+                pool.ensure_writable(slot, n)
+            except PoolExhausted:
+                victim = next(
+                    (v for v in active if pool.can_spill(v)), None
+                )
+                if victim is not None:
+                    assert pool.spill_slot(victim)
+                else:                # tier can't absorb it: preempt
+                    victim = active[0]
+                    del live[victim]
+                    pool.release(victim)
+                pool.check_invariants()
+                continue
+            pool.advance(slot, n)
+            live[slot]["len"] += n
+        elif op == 2 and active:     # proactive spill (watermark path)
+            slot = int(rng.choice(active))
+            if pool.can_spill(slot):
+                assert pool.spill_slot(slot)
+        elif op == 3:                # fetch/resume progress
+            sus = pool.suspended_slots()
+            if not sus:
+                continue
+            slot = int(rng.choice(sus))
+            if not pool._suspended[slot].started:
+                n_pg = len(pool._suspended[slot].handles)
+                pool.start_resume(
+                    slot, order=list(rng.permutation(n_pg))[: n_pg // 2]
+                )
+            pool.issue_fetches(slot, int(rng.integers(1, 4)))
+            if pool.resume_ready(slot):
+                pool.complete_resume(slot)   # may refuse under pressure
+        elif op == 4 and live:       # cancel/finish: release either state
+            slot = int(rng.choice(list(live)))
+            del live[slot]
+            pool.release(slot)
+        pool.check_invariants()
+        for slot, ent in live.items():
+            assert int(pool.lens[slot]) == ent["len"]  # conserved cross-tier
+            if suspended(slot):
+                assert len(pool._suspended[slot].handles) == \
+                    pool._offslot_pages(slot)
+            else:
+                assert pool._offslot_pages(slot) == 0
+
+    for slot in list(live):
+        pool.release(slot)
+    pool.check_invariants()
+    assert pool.alloc.free_count == pool.alloc.n_pages - 1
+    assert pool.alloc.reserved == 0
+    assert pool.host.used == 0
+    assert pool.fetches == pool.prefetch_hits + pool.prefetch_wasted
+
+
+# ---- engine integration ------------------------------------------------------
+
+
+def _engine(lm, params, **kw):
+    return ServeEngine(
+        lm, params, batch_size=2, max_len=64, scheduler="continuous",
+        page_size=8, prefill_chunk=8, **kw,
+    )
+
+
+TIER_KW = dict(
+    admission="optimistic", pool_pages=8, host_pages=24,
+    prefetch_depth=4, max_preemptions=50,
+)
+
+
+def test_tiered_engine_bitwise_parity(deepseek_lm):
+    """Device pool below the working set: the tiered engine must spill
+    (not preempt), resume every slot, and stay bitwise identical to an
+    unconstrained reference — through the same two compiled widths."""
+    lm, params = deepseek_lm
+    vocab = lm.cfg.vocab
+    ref = _engine(lm, params).generate(_reqs(vocab, 4, plen=20, max_new=24))
+
+    eng = _engine(lm, params, **TIER_KW)
+    out = eng.generate(_reqs(vocab, 4, plen=20, max_new=24))
+    st_ = eng.last_stats
+    assert st_.spills >= 1
+    assert st_.preemptions == 0
+    pool = eng.last_pool
+    pool.check_invariants()
+    assert pool.fetches == pool.prefetch_hits + pool.prefetch_wasted
+    assert pool.prefetch_hits >= 1
+    for a, b in zip(ref, out):
+        assert a.status == b.status == "ok"
+        assert np.array_equal(a.tokens, b.tokens), f"rid {a.rid} diverged"
+    assert eng.compiled_step_count() == 2
+    # tier.* telemetry mirrors the pool's plain counters.
+    assert eng.obs.value("tier.spills") == pool.spills
+    assert eng.obs.value("tier.fetches") == pool.fetches
+
+
+def test_spill_stall_falls_back_to_preemption(deepseek_lm):
+    """A stalled host writer (``tier.spill`` fault) must degrade the
+    pressure resolution to plain preemption — never wedge — and keep the
+    stream bitwise intact."""
+    lm, params = deepseek_lm
+    vocab = lm.cfg.vocab
+    ref = _engine(lm, params).generate(_reqs(vocab, 4, plen=20, max_new=24))
+    eng = _engine(lm, params, faults=FaultPlan().spill_stall(0, times=100),
+                  **TIER_KW)
+    out = eng.generate(_reqs(vocab, 4, plen=20, max_new=24))
+    st_ = eng.last_stats
+    assert st_.spills == 0
+    assert st_.preemptions >= 1
+    for a, b in zip(ref, out):
+        assert a.status == b.status == "ok"
+        assert np.array_equal(a.tokens, b.tokens), f"rid {a.rid} diverged"
+
+
+def test_fetch_fail_resumes_late_but_bitwise_intact(deepseek_lm):
+    """Dropped host→device transfers (``tier.fetch`` fault) requeue the
+    page — the resume lands late, the tokens land identical."""
+    lm, params = deepseek_lm
+    vocab = lm.cfg.vocab
+    ref = _engine(lm, params).generate(_reqs(vocab, 4, plen=20, max_new=24))
+    eng = _engine(lm, params, faults=FaultPlan().fetch_fail(0, times=3),
+                  **TIER_KW)
+    out = eng.generate(_reqs(vocab, 4, plen=20, max_new=24))
+    pool = eng.last_pool
+    assert eng.last_stats.spills >= 1
+    assert pool.fetch_failures >= 1
+    assert pool.fetches == pool.prefetch_hits + pool.prefetch_wasted
+    for a, b in zip(ref, out):
+        assert a.status == b.status == "ok"
+        assert np.array_equal(a.tokens, b.tokens), f"rid {a.rid} diverged"
