@@ -17,7 +17,10 @@ Checks:
   the resilience counters (preemptions / restore tokens / shed /
   deadline misses / cancels) and admission-paused gauge, the ``tier.*``
   tiering counters/gauges (with ``tier.prefetch_hits + tier.prefetch_wasted
-  == tier.fetches`` — prefetch conservation),
+  == tier.fetches`` — prefetch conservation), the ``serve.spec.*``
+  speculative-decoding counters (with ``serve.spec.accepted_tokens +
+  serve.spec.rollback_tokens == serve.spec.draft_tokens`` — draft-token
+  conservation),
   and ``llc.modeled_miss_bytes`` gauges for >= 2 distinct traversal orders;
   histogram lines carry consistent buckets (cumulative, ending at +Inf,
   count == last cumulative).
@@ -56,6 +59,11 @@ REQUIRED_COUNTER_SERIES = (
     ("tier.fetches", {}),
     ("tier.prefetch_hits", {}),
     ("tier.prefetch_wasted", {}),
+    # Speculative-decoding counters (DESIGN.md §14): pre-created at engine
+    # start, so a run with no drafter still carries them at 0.
+    ("serve.spec.draft_tokens", {}),
+    ("serve.spec.accepted_tokens", {}),
+    ("serve.spec.rollback_tokens", {}),
 )
 REQUIRED_GAUGES = (
     "pool.occupancy_frac",
@@ -78,6 +86,7 @@ def check_metrics(
     errors: list,
     min_order_switches: int = 0,
     min_prefetch_hits: int = 0,
+    min_draft_tokens: int = 0,
 ) -> None:
     try:
         with open(path) as f:
@@ -155,6 +164,24 @@ def check_metrics(
             f"requires >= {min_prefetch_hits} prefetch hit(s)"
         )
 
+    # Speculative conservation (DESIGN.md §14): every drafted token is
+    # either accepted into the committed stream or rolled back off the KV
+    # cache — accepted + rolled_back must balance drafted exactly.
+    drafted = cval("serve.spec.draft_tokens")
+    acc, rolled = cval("serve.spec.accepted_tokens"), cval(
+        "serve.spec.rollback_tokens"
+    )
+    if acc + rolled != drafted:
+        errors.append(
+            f"{path}: speculative accounting drift: accepted ({acc}) + "
+            f"rolled back ({rolled}) != drafted ({drafted})"
+        )
+    if min_draft_tokens > 0 and drafted < min_draft_tokens:
+        errors.append(
+            f"{path}: serve.spec.draft_tokens = {drafted} — the speculative "
+            f"smoke requires >= {min_draft_tokens} drafted token(s)"
+        )
+
     for (name, labels), rec in by_kind["histogram"].items():
         buckets = rec.get("buckets", [])
         if not buckets or buckets[-1][0] != "+Inf":
@@ -209,6 +236,9 @@ def main() -> int:
     ap.add_argument("--min-prefetch-hits", type=int, default=0, metavar="N",
                     help="require the tier.prefetch_hits counter to be "
                          ">= N (the --host-pages tiering smoke)")
+    ap.add_argument("--min-draft-tokens", type=int, default=0, metavar="N",
+                    help="require the serve.spec.draft_tokens counter to be "
+                         ">= N (the --draft speculative smoke)")
     args = ap.parse_args()
 
     errors: list[str] = []
@@ -217,6 +247,7 @@ def main() -> int:
         errors,
         min_order_switches=args.min_order_switches,
         min_prefetch_hits=args.min_prefetch_hits,
+        min_draft_tokens=args.min_draft_tokens,
     )
     check_trace(args.trace, errors)
     if errors:

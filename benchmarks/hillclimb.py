@@ -412,6 +412,104 @@ def sweep_orders(arch: str, *, seq: int, batch: int, impl: str, reps: int,
     return rec
 
 
+def sweep_draft_len(arch: str, *, draft_lens=(0, 2, 4, 7), reps: int = 3,
+                    max_new: int = 96):
+    """Speculative draft-length sweep: pick K for the serving engine.
+
+    Runs the decode-heavy repetitive stream (the shape ``serve_bench
+    --scenario speculative`` asserts on) through the continuous engine with
+    the self-drafting n-gram drafter at each candidate ``K``, plus the
+    ``K=0`` no-drafter baseline. Candidates are ranked by the
+    *deterministic* mixed-step count (wall TPOT is recorded per candidate
+    as a sanity check but CPU-CI noise never picks the winner); ties go to
+    the smaller K — fewer wasted draft positions per verification chunk.
+    The winner is persisted to the autotune cache
+    (``kind="spec_draft_len"``) through the same JSONL schema the
+    order-sweep winners use, so a serving launcher can consult it at
+    startup.
+    """
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve import NgramDrafter, Request, ServeEngine
+
+    page, chunk, max_len = 8, 8, 256
+    seeds = (5, 8)
+    cfg = get_config(arch).reduced()
+    lm = build_model(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    def make():
+        reqs = []
+        for i, s in enumerate(seeds):
+            rng = np.random.default_rng(s)
+            toks = np.tile(rng.integers(5, 20, size=4), 6).astype(np.int32)
+            reqs.append(Request(tokens=toks, max_new_tokens=max_new, rid=i))
+        return reqs
+
+    rows = []
+    for k in draft_lens:
+        eng = ServeEngine(
+            lm, params, batch_size=len(seeds), max_len=max_len,
+            scheduler="continuous", page_size=page, prefill_chunk=chunk,
+            drafter=NgramDrafter(ngram_max=4) if k > 0 else None,
+            draft_len=max(k, 1),
+        )
+        eng.generate(make())  # warm-up: compile both widths
+        best = None
+        for _ in range(reps):
+            t0 = time.time()
+            res = eng.generate(make())
+            best = min(best, time.time() - t0) if best else time.time() - t0
+        st = eng.last_stats
+        tokens = sum(r.steps for r in res)
+        rows.append({
+            "draft_len": k,
+            "mixed_steps": st.mixed_steps,
+            "seconds": round(best, 4),
+            "tok_per_s": round(tokens / best, 2),
+            "draft_tokens": st.draft_tokens,
+            "accepted_tokens": st.accepted_tokens,
+            "acceptance_rate": (
+                round(st.acceptance_rate, 3) if st.draft_tokens else 0.0
+            ),
+        })
+        print(f"[sweep-draft-len {arch}] K={k}: {st.mixed_steps} steps, "
+              f"{rows[-1]['tok_per_s']} tok/s, "
+              f"acceptance {rows[-1]['acceptance_rate']:.0%}")
+
+    base = next(r for r in rows if r["draft_len"] == 0)
+    winner = min(rows, key=lambda r: (r["mixed_steps"], r["draft_len"]))
+    winner = dict(winner, steps_ratio=round(
+        base["mixed_steps"] / max(winner["mixed_steps"], 1), 3))
+
+    os.makedirs(OUT, exist_ok=True)
+    rec = {
+        "arch": arch,
+        "backend": jax.default_backend(),
+        "max_new": max_new,
+        "prefill_chunk": chunk,
+        "candidates": rows,
+        "winner": winner,
+    }
+    path = os.path.join(OUT, f"spec_draft_len_{arch.replace('/', '_')}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[sweep-draft-len {arch}] winner: K={winner['draft_len']} "
+          f"({winner['steps_ratio']}x steps vs K=0) -> {path}")
+    record_winner(
+        "spec_draft_len",
+        key={"arch": arch, "max_new": max_new, "prefill_chunk": chunk,
+             "drafter": "ngram", "backend": rec["backend"]},
+        winner=winner,
+    )
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(EXPERIMENTS))
@@ -422,6 +520,14 @@ def main():
     ap.add_argument("--sweep-orders", default=None, metavar="ARCH",
                     help="joint (order, snake_group, blocks) sweep: modeled "
                     "LLC miss bytes + microstep timing for ARCH, then exit")
+    ap.add_argument("--sweep-draft-len", default=None, metavar="ARCH",
+                    help="speculative draft-length sweep for ARCH: rank "
+                    "K candidates by deterministic mixed-step count on the "
+                    "decode-heavy stream, persist the winner to the "
+                    "autotune cache, then exit")
+    ap.add_argument("--draft-lens", default="0,2,4,7",
+                    help="comma-separated K candidates for "
+                    "--sweep-draft-len (0 = no-drafter baseline)")
     ap.add_argument("--capacity-mib", type=float, default=3.0,
                     help="modeled LLC capacity for --sweep-orders (MiB)")
     ap.add_argument("--llc-workers", type=int, default=12,
@@ -437,6 +543,14 @@ def main():
                     choices=["auto", "pallas", "pallas_interpret", "xla"])
     ap.add_argument("--reps", type=int, default=3)
     args = ap.parse_args()
+
+    if args.sweep_draft_len:
+        sweep_draft_len(
+            args.sweep_draft_len,
+            draft_lens=tuple(int(x) for x in args.draft_lens.split(",")),
+            reps=args.reps,
+        )
+        return
 
     if args.sweep_orders:
         sweep_orders(

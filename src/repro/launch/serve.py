@@ -36,6 +36,19 @@ with an N-page host tier — at ``--spill-watermark`` occupancy the engine
 spills the coldest slot (largest modeled reuse distance) to the host
 instead of preempting it, and streams pages back ``--prefetch-depth`` per
 step in the traversal's visit order, overlapped with in-flight steps.
+
+Speculative decoding (DESIGN.md §14): ``--draft ngram`` turns on
+self-drafting prompt-lookup speculation — every decode row plans up to
+``--draft-len`` draft tokens into the same ragged mixed step as a
+q_len=K+1 verification chunk; accepted tokens commit, rejected drafts
+roll the row's KV length back (host-side, no new kernel, still exactly
+two compiled step widths). ``--draft model`` uses a draft *model* with
+its own paged cache instead (``--draft-model ARCH``; defaults to the
+serving model itself — self-speculation). Output streams are bitwise
+identical to ``--draft none`` for greedy and sampled decoding alike.
+``--chaos-step-fail N`` injects one transient device-step failure at
+mixed step N (the CI speculative chaos smoke: the step retries once and
+the stream is unchanged).
 """
 
 from __future__ import annotations
@@ -146,6 +159,24 @@ def main():
                     help="host pages staged back per step boundary while a "
                          "spilled slot resumes, in the next step's "
                          "traversal visit order (needs --host-pages)")
+    ap.add_argument("--draft", default="none",
+                    choices=["none", "ngram", "model"],
+                    help="speculative decoding drafter (DESIGN.md §14): "
+                         "'ngram' self-drafts via prompt lookup; 'model' "
+                         "runs a draft model with its own paged cache "
+                         "(continuous scheduler only)")
+    ap.add_argument("--draft-len", type=int, default=4, metavar="K",
+                    help="draft tokens planned per decode row per step "
+                         "(verified as one q_len=K+1 ragged chunk; clamped "
+                         "to the prefill chunk and the token budget)")
+    ap.add_argument("--draft-model", default=None, metavar="ARCH",
+                    help="arch for --draft model (reduced like the target; "
+                         "default: the serving model itself — "
+                         "self-speculation)")
+    ap.add_argument("--chaos-step-fail", type=int, default=0, metavar="N",
+                    help="inject one transient device-step failure at mixed "
+                         "step N (retried once; the CI speculative chaos "
+                         "smoke)")
     ap.add_argument("--chaos-fetch-fail", type=int, default=0, metavar="N",
                     help="inject N tier.fetch faults (dropped host->device "
                          "transfers; the prefetcher requeues and retries) — "
@@ -187,6 +218,35 @@ def main():
         params = state["params"]
         print(f"restored params from step {step}")
 
+    drafter = None
+    if args.draft != "none":
+        from repro.serve import make_drafter
+
+        draft_lm, draft_params = lm, params
+        if args.draft == "model" and args.draft_model:
+            draft_cfg = get_config(args.draft_model)
+            if args.reduced:
+                draft_cfg = draft_cfg.reduced()
+            draft_lm = build_model(draft_cfg)
+            draft_params = draft_lm.init(jax.random.PRNGKey(1))
+        drafter = make_drafter(
+            args.draft,
+            lm=draft_lm,
+            params=draft_params,
+            n_slots=args.batch_size,
+            max_len=args.max_len,
+            page_size=args.page_size,
+            prefill_chunk=args.prefill_chunk,
+        )
+
+    faults = None
+    if args.chaos_fetch_fail > 0 or args.chaos_step_fail > 0:
+        faults = FaultPlan()
+        if args.chaos_fetch_fail > 0:
+            faults.fetch_fail(0, times=args.chaos_fetch_fail)
+        if args.chaos_step_fail > 0:
+            faults.fail_device_step(args.chaos_step_fail)
+
     eng = ServeEngine(
         lm,
         params,
@@ -215,11 +275,9 @@ def main():
         host_pages=args.host_pages,
         spill_watermark=args.spill_watermark,
         prefetch_depth=args.prefetch_depth,
-        faults=(
-            FaultPlan().fetch_fail(0, times=args.chaos_fetch_fail)
-            if args.chaos_fetch_fail > 0
-            else None
-        ),
+        drafter=drafter,
+        draft_len=args.draft_len,
+        faults=faults,
     )
     if adapt and eng.order_ctl is not None:
         src = eng.order_ctl.seeded_from
@@ -265,6 +323,13 @@ def main():
                 f"({stats.restore_tokens} tokens re-prefilled), "
                 f"{stats.shed} shed, {stats.deadline_miss} deadline, "
                 f"{stats.cancelled} cancelled, {stats.failed} failed"
+            )
+        if stats.draft_tokens:
+            print(
+                f"  speculative: {stats.draft_tokens} drafted, "
+                f"{stats.accepted_tokens} accepted "
+                f"({stats.acceptance_rate:.0%}), "
+                f"{stats.rollback_tokens} rolled back"
             )
         if stats.spills or stats.tier_fetches:
             hit_rate = stats.prefetch_hits / max(stats.tier_fetches, 1)

@@ -119,6 +119,26 @@ class LLCSampler:
             causal=True,
         )
 
+    def verify_spec_for(self, kv_tokens: int, step_q: int) -> FlashGridSpec:
+        """The grid spec of one speculative *verification* sweep: a
+        ``step_q``-token query chunk (K drafts + 1) attending the full
+        ``kv_tokens`` footprint. Rectangular and non-causal — the chunk
+        reads every prior KV page; only the intra-chunk triangle is masked,
+        which at page granularity rounds away. This is the footprint the
+        traversal-order models must see under speculative decoding: the
+        same KV sweep now amortized over ``step_q`` query rows."""
+        kv_tokens = max(self.page, -(-kv_tokens // self.page) * self.page)
+        return FlashGridSpec(
+            seq_q=max(self.page, -(-step_q // self.page) * self.page),
+            seq_kv=kv_tokens,
+            n_groups=self.n_groups,
+            head_dim=self.head_dim,
+            q_block=self.page,
+            kv_block=self.page,
+            elem_bytes=self.elem_bytes,
+            causal=False,
+        )
+
     def pool_footprint(self, pool) -> dict:
         """Live footprint summary: active rows, longest row (tokens),
         distinct held pages, shared (refcount>1) pages, resident KV bytes."""
@@ -136,13 +156,13 @@ class LLCSampler:
 
     # ---- sampling ------------------------------------------------------------
 
-    def maybe_sample(self, step_epoch: int, pool) -> bool:
+    def maybe_sample(self, step_epoch: int, pool, step_q: Optional[int] = None) -> bool:
         """Sample iff enabled and ``step_epoch`` lands on the period."""
         if self.every <= 0 or step_epoch % self.every != 0:
             return False
-        return self.sample(pool)
+        return self.sample(pool, step_q=step_q)
 
-    def sample(self, pool) -> bool:
+    def sample(self, pool, step_q: Optional[int] = None) -> bool:
         fp = self.pool_footprint(pool)
         if fp["max_len"] == 0:
             return False
@@ -151,6 +171,14 @@ class LLCSampler:
         reg.gauge("llc.capacity_bytes").set(self.capacity_bytes)
         reg.gauge("llc.active_rows").set(fp["active_rows"])
         reg.gauge("llc.shared_pages").set(fp["shared_pages"])
+        # ``step_q`` is the widest decode/verify chunk of the step that
+        # triggered the sample: 1 on plain decode, K+1 under speculative
+        # decoding. Gauged so dashboards (and the adaptation controller's
+        # inputs) see the per-sweep query width the footprint is amortized
+        # over, and — when the chunk is wider than one token — the verify
+        # model is evaluated per order alongside the fwd model.
+        if step_q is not None:
+            reg.gauge("llc.step_q_tokens").set(int(step_q))
 
         spec = self.fwd_spec_for(fp["max_len"])
         fwd_miss = []
@@ -167,6 +195,25 @@ class LLCSampler:
                 res.misses
             )
         reg.gauge("llc.best_order_index").set(fwd_miss.index(min(fwd_miss)))
+
+        verify_miss: Optional[dict] = None
+        if step_q is not None and step_q > 1:
+            vspec = self.verify_spec_for(fp["max_len"], int(step_q))
+            verify_miss = {}
+            for order in self.orders:
+                res = fwd_llc_model(
+                    vspec,
+                    order,
+                    snake_group=(
+                        self.snake_group if order == "block_snake" else None
+                    ),
+                    n_workers=self.n_workers,
+                    capacity_bytes=self.capacity_bytes,
+                )
+                verify_miss[order] = res.misses
+                reg.gauge(
+                    "llc.modeled_miss_bytes", order=order, model="verify"
+                ).set(res.misses)
 
         # Shared-prefix decode model: evaluated when the pool actually holds
         # shared pages across >1 rows, and recorded into the history entry
@@ -214,6 +261,8 @@ class LLCSampler:
                 "fwd_miss": dict(zip(self.orders, fwd_miss)),
                 "shared_miss": shared_miss,
                 "shared_frac": shared_frac,
+                "step_q": 1 if step_q is None else int(step_q),
+                "verify_miss": verify_miss,
                 "current_order": self.current_order,
             }
         )

@@ -19,6 +19,7 @@ from repro.serve.kv_pool import (
     assemble_cache_view,
 )
 from repro.serve.scheduler import ContinuousScheduler, Slot, StepItem
+from repro.serve.spec import Drafter, ModelDrafter, NgramDrafter, make_drafter
 from repro.serve.tiering import (
     HostPageStore,
     TieredPagePool,
@@ -49,6 +50,10 @@ __all__ = [
     "ContinuousScheduler",
     "Slot",
     "StepItem",
+    "Drafter",
+    "ModelDrafter",
+    "NgramDrafter",
+    "make_drafter",
     "HostPageStore",
     "TieredPagePool",
     "select_spill_victim",

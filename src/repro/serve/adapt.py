@@ -143,7 +143,7 @@ class OrderAdaptController:
 
     # ---- the runtime decision loop -------------------------------------------
 
-    def maybe_adapt(self, step_epoch: int, pool, sampler) -> bool:
+    def maybe_adapt(self, step_epoch: int, pool, sampler, step_q=None) -> bool:
         """Run one adaptation decision if ``step_epoch`` lands on the epoch.
 
         Samples the LLC models against the live pool (through ``sampler``,
@@ -151,11 +151,14 @@ class OrderAdaptController:
         fresh per-candidate modeled miss bytes. On a switch, the sampler's
         notion of the current order — and the history entry that triggered
         the switch — are updated, so the recorded order is the one driving
-        the *next* steps. Returns True iff the order changed.
+        the *next* steps. ``step_q`` (the step's widest decode/verify
+        chunk — K+1 under speculative decoding) is forwarded to the sampler
+        so the recorded footprint reflects multi-token verification sweeps.
+        Returns True iff the order changed.
         """
         if not self.enabled or self.epoch <= 0 or step_epoch % self.epoch != 0:
             return False
-        if not sampler.sample(pool):
+        if not sampler.sample(pool, step_q=step_q):
             return False
         entry = sampler.history[-1]
         switched = self.consider(

@@ -176,6 +176,20 @@ class StepStats:
     tier_fetches: int = 0         # host pages staged back toward the device
     prefetch_hits: int = 0        # fetched pages attended by the resumed row
     prefetch_wasted: int = 0      # fetched pages released before being used
+    draft_tokens: int = 0         # speculative draft tokens verified
+    accepted_tokens: int = 0      # drafts accepted (committed to streams)
+    rollback_tokens: int = 0      # drafts rejected (len decrement + page
+                                  # release); accepted + rollback == draft
+                                  # by construction
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of verified draft tokens accepted (NaN with no drafts)."""
+        return (
+            self.accepted_tokens / self.draft_tokens
+            if self.draft_tokens
+            else math.nan
+        )
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -255,6 +269,8 @@ class ServeEngine:
         host_pages: Optional[int] = None,
         spill_watermark: Optional[float] = None,
         prefetch_depth: int = 2,
+        drafter=None,
+        draft_len: int = 4,
     ):
         """Pass ``mesh`` (+ optional ParallelConfig) for sharded serving:
         params are placed on their TP/FSDP shardings and every step runs
@@ -325,9 +341,28 @@ class ServeEngine:
         (``core.schedule.future_visit_window``), with the host→device
         copies issued while the current mixed step is in flight; the slot
         re-enters planning only once fully resident, so spill/resume is
-        bitwise-invisible to its token stream."""
+        bitwise-invisible to its token stream.
+
+        Speculative decoding (DESIGN.md §14, continuous path only):
+        ``drafter`` (a ``serve.spec.Drafter``) proposes up to ``draft_len``
+        draft tokens per decode row each boundary; the row rides the mixed
+        step as a ``q_len = K+1`` verification chunk (the same ragged
+        primitive prefill chunks use, so the compiled widths stay exactly
+        two), every chunk position is sampled in the one device step, and
+        the longest draft prefix matching the sampled targets is committed
+        — plus the sampled token after it. Rejected drafts are undone
+        host-side: ``PagedKVPool.rollback`` decrements the row's len and
+        releases now-dead tail pages. Per-row PRNG keys fold the sample
+        *count*, advanced only per accepted token, so greedy AND sampled
+        streams are bitwise identical to non-speculative serving."""
         if scheduler not in ("static", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
+        if drafter is not None and scheduler != "continuous":
+            raise ValueError("speculative decoding requires scheduler='continuous'")
+        if draft_len < 1:
+            raise ValueError(f"draft_len must be >= 1, got {draft_len}")
+        self.drafter = drafter
+        self.draft_len = int(draft_len)
         if admission not in ("reserve", "optimistic"):
             raise AdmissionError(f"unknown admission discipline {admission!r}")
         if scheduler == "continuous":
@@ -435,6 +470,13 @@ class ServeEngine:
         self._m_failed = r.counter("serve.failed")
         self._m_retries = r.counter("serve.step_retries")
         self._m_admit_paused = r.gauge("serve.admission_paused")
+        # Speculative-decoding series (DESIGN.md §14) — pre-created at zero
+        # on every engine so check_metrics.py can require the schema (and
+        # its accepted + rolled_back == drafted conservation) even on
+        # non-speculative runs.
+        self._m_draft_tok = r.counter("serve.spec.draft_tokens")
+        self._m_accept_tok = r.counter("serve.spec.accepted_tokens")
+        self._m_rollback_tok = r.counter("serve.spec.rollback_tokens")
         # Tiering series (DESIGN.md §13) — likewise pre-created at zero on
         # every engine (tiered or not), so check_metrics.py can require the
         # full tier.* schema unconditionally. The TieredPagePool increments
@@ -710,7 +752,7 @@ class ServeEngine:
 
             def step(
                 params, tokens, pages, bt, lens, qlens, order_group,
-                temps, seeds, counts,
+                temps, seeds, bases,
             ):
                 # ``order_group`` is the traced effective reversal-group
                 # scalar (adapt.OrderAdaptController.effective_group): the
@@ -720,15 +762,46 @@ class ServeEngine:
                     pages, bt, lens, n_layers, qlens, order_group
                 )
                 logits, caches = lm.decode_step(params, tokens, caches)
-                # Each row samples at its last valid chunk position (the
-                # prompt's final token for a finishing prefill row, the
-                # freshly written position for a decode row).
-                last = jnp.maximum(qlens - 1, 0)
-                logits = jnp.take_along_axis(
-                    logits, last[:, None, None], axis=1
-                )[:, 0]
-                keys = _row_keys(base, seeds, counts)
-                toks = _sample_rows(logits, temps, keys)
+                # EVERY chunk position is sampled — position p of row b uses
+                # the PRNG key for sample index ``bases[b] + p``, the exact
+                # key a sequence of q_len=1 steps would have used one by
+                # one. The host picks what it needs: the last valid position
+                # for prefill/decode rows, the whole K+1 target ladder for a
+                # speculative verification row (position i conditions on
+                # chunk[0..i], i.e. on the first i draft tokens). Per-row
+                # sampling math is unchanged (greedy at temp<=0, categorical
+                # at the row's own temperature), so each position is bitwise
+                # what the old single-position step sampled.
+                greedy = jnp.argmax(logits, axis=-1)
+
+                def _sampled(_):
+                    pos = jnp.arange(logits.shape[1], dtype=jnp.int32)
+                    keys = jax.vmap(
+                        lambda s, b: jax.vmap(
+                            lambda c: jax.random.fold_in(
+                                jax.random.fold_in(base, s), c
+                            )
+                        )(b + pos)
+                    )(seeds, bases)
+                    return jax.vmap(
+                        jax.vmap(
+                            lambda l, t, k: jax.random.categorical(
+                                k, l / jnp.maximum(t, 1e-6)
+                            ),
+                            in_axes=(0, None, 0),
+                        )
+                    )(logits, temps, keys)
+
+                # An all-greedy batch (the decode-heavy common case) skips
+                # the key ladder + categorical entirely; with any sampling
+                # row present the full per-position math runs, bitwise
+                # identical to the ungated form.
+                sampled = jax.lax.cond(
+                    jnp.any(temps > 0.0), _sampled, lambda _: greedy, None
+                )
+                toks = jnp.where(
+                    temps[:, None] > 0.0, sampled, greedy
+                ).astype(jnp.int32)
                 return toks, {name: caches[name] for name in pages}
 
             self._mixed_step = jax.jit(step)
@@ -774,10 +847,16 @@ class ServeEngine:
             pool = PagedKVPool(cfg, cfg.n_layers, n_slots, cap, **pool_kw)
         self.last_pool = pool  # exposed for benches/tests (sharing counters)
 
+        drafter = self.drafter
+        if drafter is not None:
+            drafter.reset()
         results: dict[int, GenerationResult] = {}
         resume: dict[int, list[int]] = {}   # preempted: id(req) -> generated
         n_preempts: dict[int, int] = {}     # id(req) -> times preempted
-        tally = {"preempt": 0, "restore": 0, "spill": 0}
+        tally = {
+            "preempt": 0, "restore": 0, "spill": 0,
+            "draft": 0, "accept": 0, "roll": 0,
+        }
         cur = np.full((n_slots,), self.eos, np.int32)  # last sampled token
         temps = np.zeros((n_slots,), np.float32)
         seeds = np.zeros((n_slots,), np.int32)
@@ -808,6 +887,8 @@ class ServeEngine:
         def finish(slot: int, status: str = "ok") -> None:
             st = sched.retire(slot)
             pool.release(slot)
+            if drafter is not None:
+                drafter.release(slot)
             cur[slot] = self.eos
             temps[slot] = 0.0
             resolve(st.request, list(st.generated), status)
@@ -819,6 +900,8 @@ class ServeEngine:
             # fail it cleanly once past its preemption bound.
             st = sched.retire(slot)
             pool.release(slot)
+            if drafter is not None:
+                drafter.release(slot)
             cur[slot] = self.eos
             temps[slot] = 0.0
             r = st.request
@@ -1028,6 +1111,46 @@ class ServeEngine:
                     for r in sched.shed_over(step, self.max_queue):
                         resolve(r, resume.pop(id(r), []), "shed")
 
+                # Speculative drafting (DESIGN.md §14) — ONCE per boundary,
+                # before the plan/pressure retry loop: a model drafter runs
+                # device steps of its own, so it must not be re-invoked when
+                # a PoolExhausted retry below re-plans. K is clamped per row
+                # so the verification chunk can neither outgrow the row's
+                # new_limit / cache capacity (speculative writes stay inside
+                # the admission reservation) nor exceed the wide compiled
+                # width (q_len = K+1 <= prefill_chunk).
+                drafts: dict[int, list[int]] = {}
+                if drafter is not None:
+                    want = []
+                    for i in sched.runnable_slots():
+                        st = sched.slots[i]
+                        if st.done or st.prefilling:
+                            continue
+                        kmax = min(
+                            self.draft_len,
+                            st.new_limit - len(st.generated) - 1,
+                            cap - int(pool.lens[i]) - 1,
+                            self._chunk - 1,
+                        )
+                        if kmax < 1:
+                            continue
+                        ctx = np.concatenate(
+                            [
+                                st.prompt,
+                                np.asarray(
+                                    st.generated[st.n_prior :], np.int32
+                                ),
+                            ]
+                        )
+                        want.append((i, ctx, kmax))
+                    if want:
+                        with tr.span("serve.draft", rows=len(want)):
+                            out = drafter.draft_batch(want)
+                        for (i, _, kmax) in want:
+                            d = [int(t) for t in out.get(i, [])][:kmax]
+                            if d:
+                                drafts[i] = d
+
                 # Plan under pressure: make every planned row writable; a
                 # mid-step PoolExhausted (optimistic oversubscription or an
                 # injected fault) resolves shed → spill → preempt: spilling
@@ -1036,10 +1159,12 @@ class ServeEngine:
                 # Each retry removes one runnable slot — the victim may be
                 # the very slot that failed — so this terminates.
                 # ensure_writable is idempotent; re-ensured rows are no-ops
-                # on retry.
+                # on retry. (Draft q_lens are part of the plan; a retried
+                # plan re-derives them from the surviving slots.)
+                draft_lens = {i: len(d) for i, d in drafts.items()} or None
                 while True:
                     with tr.span("serve.plan_step"):
-                        plan = sched.plan_step()
+                        plan = sched.plan_step(draft_lens)
                     if not plan:
                         break
                     try:
@@ -1080,16 +1205,27 @@ class ServeEngine:
                 self._step_widths.add(width)
                 tokens = np.full((n_slots, width), self.eos, np.int32)
                 qlens = np.zeros((n_slots,), np.int32)
+                # Per-row first sample index for the step's key ladder
+                # (position p of row b folds ``bases[b] + p``): decode and
+                # verification rows start at the row's live count; a prefill
+                # row's only consumed position is its last (q_len-1), which
+                # must land exactly on the row's count — the same key the
+                # old single-position step folded.
+                bases = counts.copy()
                 n_decode = n_prefill = 0
                 for it in plan:
                     st = sched.slots[it.slot]
                     if it.is_prefill:
                         seg = st.prompt[st.prompt_pos : st.prompt_pos + it.q_len]
                         tokens[it.slot, : len(seg)] = seg
+                        bases[it.slot] = counts[it.slot] - (it.q_len - 1)
                         n_prefill += it.q_len
                     else:
-                        tokens[it.slot, 0] = cur[it.slot]
-                        n_decode += 1
+                        row = [int(cur[it.slot])] + drafts.get(it.slot, [])[
+                            : it.n_draft
+                        ]
+                        tokens[it.slot, : len(row)] = row
+                        n_decode += it.q_len
                     qlens[it.slot] = it.q_len
 
                 # The device span closes only after the sampled tokens are
@@ -1127,7 +1263,7 @@ class ServeEngine:
                             ),
                             temps,
                             seeds,
-                            counts,
+                            bases,
                         )
                     if tiered and pool.fetch_backlog():
                         # Overlap the prefetch with the in-flight step: the
@@ -1182,29 +1318,79 @@ class ServeEngine:
                         # Prompt complete: publish its frozen pages for future
                         # admissions to adopt, then take the first sample.
                         pool.register_prompt(it.slot, st.prompt)
-                    tok = int(toks[it.slot])
-                    if id(st.request) not in first_t:
-                        first_t[id(st.request)] = time.perf_counter()
-                    counts[it.slot] += 1
-                    cur[it.slot] = tok
-                    if st.record(tok):
+                    if it.n_draft == 0:
+                        tok = int(toks[it.slot, it.q_len - 1])
+                        if id(st.request) not in first_t:
+                            first_t[id(st.request)] = time.perf_counter()
+                        counts[it.slot] += 1
+                        cur[it.slot] = tok
+                        if st.record(tok):
+                            finish(it.slot)
+                        continue
+                    # Speculative verification row: the chunk was [cur,
+                    # d_1..d_K]; target t_i = toks[slot, i] is the token the
+                    # sequential stream would sample after absorbing the
+                    # first i drafts. Accept the longest prefix d_1..d_a
+                    # with d_{i+1} == t_i, emit t_0..t_a (the bonus token t_a
+                    # rides for free), stopping early at EOS / new_limit as
+                    # a sequential stream would; then roll the uncommitted
+                    # chunk tail back out of the cache. The row's sample
+                    # count advances by exactly the tokens emitted — the
+                    # PRNG-stream guarantee that keeps sampled runs bitwise
+                    # identical to non-speculative serving.
+                    d = drafts.get(it.slot, [])[: it.n_draft]
+                    k = len(d)
+                    a = 0
+                    while a < k and d[a] == int(toks[it.slot, a]):
+                        a += 1
+                    emitted = 0
+                    finished = False
+                    for p in range(a + 1):
+                        tok = int(toks[it.slot, p])
+                        if id(st.request) not in first_t:
+                            first_t[id(st.request)] = time.perf_counter()
+                        emitted += 1
+                        cur[it.slot] = tok
+                        if st.record(tok):
+                            finished = True
+                            break
+                    counts[it.slot] += emitted
+                    n_roll = it.q_len - emitted
+                    if n_roll and not finished:
+                        pool.rollback(it.slot, n_roll)
+                    accepted = emitted - 1
+                    tally["draft"] += k
+                    tally["accept"] += accepted
+                    tally["roll"] += k - accepted
+                    self._m_draft_tok.inc(k)
+                    self._m_accept_tok.inc(accepted)
+                    self._m_rollback_tok.inc(k - accepted)
+                    if finished:
                         finish(it.slot)
                 if self.faults is not None and self.faults.fired_this_step:
                     # Every injected fault is followed by a full pool
                     # consistency audit at the very step that absorbed it.
                     pool.check_invariants()
                 pool.emit_gauges()
+                # Widest decode/verify chunk of this step (K+1 under
+                # speculative decoding, 1 otherwise): the LLC models must
+                # see the query width each KV sweep is amortized over.
+                step_q = max(
+                    (it.q_len for it in plan if not it.is_prefill), default=1
+                )
                 if self.order_ctl is not None and self.order_ctl.enabled:
                     # Adaptation drives its own sampling cadence (the
                     # decision needs a fresh reading, not a stale gauge).
-                    if self.order_ctl.maybe_adapt(n_steps, pool, self.llc):
+                    if self.order_ctl.maybe_adapt(
+                        n_steps, pool, self.llc, step_q=step_q
+                    ):
                         tr.instant(
                             "serve.order_switch",
                             order=self.order_ctl.order.value,
                             step=n_steps,
                         )
                 elif self.llc is not None:
-                    self.llc.maybe_sample(n_steps, pool)
+                    self.llc.maybe_sample(n_steps, pool, step_q=step_q)
             self._m_step_time.observe(time.perf_counter() - t_iter)
             if self._log_every and n_steps and n_steps % self._log_every == 0:
                 self._log_stats_line(n_steps, pool, sched)
@@ -1235,12 +1421,23 @@ class ServeEngine:
             tier_fetches=getattr(pool, "fetches", 0),
             prefetch_hits=getattr(pool, "prefetch_hits", 0),
             prefetch_wasted=getattr(pool, "prefetch_wasted", 0),
+            draft_tokens=tally["draft"],
+            accepted_tokens=tally["accept"],
+            rollback_tokens=tally["roll"],
         )
         return [results[id(r)] for r in requests]
 
     def _log_stats_line(self, n_steps: int, pool, sched) -> None:
         """Periodic one-line operational summary (launchers enable it)."""
         v = self.obs.value
+        spec = ""
+        if self.drafter is not None:
+            drafted = v("serve.spec.draft_tokens")
+            acc = v("serve.spec.accepted_tokens")
+            spec = (
+                f" draft={drafted:.0f} accept={acc:.0f}"
+                f" ({acc / drafted:.0%})" if drafted else " draft=0"
+            )
         print(
             f"[serve] step {n_steps}: "
             f"queue={len(sched.waiting)} active={len(sched.active_slots())} "
@@ -1250,6 +1447,7 @@ class ServeEngine:
             f"pool free={pool.alloc.free_count} "
             f"occ={v('pool.occupancy_frac'):.0%} "
             f"adopted={pool.shared_hits} cow={pool.cow_forks}"
+            f"{spec}"
         )
 
     def _admit(
@@ -1311,6 +1509,9 @@ class ServeEngine:
             prompt_pos=shared,
         )
         st.generated = prior
+        st.n_prior = len(prior)  # prompt already carries the prior tokens —
+                                 # the committed stream for drafters is
+                                 # prompt + generated[n_prior:]
         temps[slot] = req.temperature
         seeds[slot] = self._seed_for(req, idx)
         counts[slot] = len(prior)

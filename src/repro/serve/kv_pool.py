@@ -250,6 +250,12 @@ class PagedKVPool:
 
         self.block_tables = np.zeros((n_slots, self.blocks_per_seq), np.int32)
         self.lens = np.zeros((n_slots,), np.int32)
+        # Per-slot written high-water mark: the furthest position this slot
+        # itself has made writable (``ensure_writable``). ``rollback`` moves
+        # ``lens`` down but not ``_written`` — the gap is exactly the region
+        # holding disowned (rejected-draft) KV, which the registry-coverage
+        # invariant in ``check_invariants`` polices.
+        self._written = np.zeros((n_slots,), np.int32)
         self._ref = np.zeros((self.alloc.n_pages,), np.int32)
         self._slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
         self._slot_reserved: list[int] = [0] * n_slots
@@ -372,6 +378,7 @@ class PagedKVPool:
         self.block_tables[slot] = 0
         self.block_tables[slot, : len(pids)] = pids
         self.lens[slot] = covered
+        self._written[slot] = 0  # adopted prefix KV was written by the donor
         return covered
 
     def _take_page(self, slot: int) -> int:
@@ -435,10 +442,64 @@ class PagedKVPool:
                 pid = self._take_page(slot)
                 held.append(pid)
                 self.block_tables[slot, pg] = pid
+        self._written[slot] = max(int(self._written[slot]), end)
 
     def advance(self, slot: int, n: int = 1) -> None:
         """Record ``n`` written tokens (host mirror of the device len+q_len)."""
         self.lens[slot] = min(self.lens[slot] + n, self.capacity)
+
+    def rollback(self, slot: int, n: int) -> int:
+        """Disown the last ``n`` tokens of ``slot`` — the speculative-decoding
+        reject path: a host-side ``lens`` decrement plus release of tail
+        pages that no longer back any live token. Returns pages freed.
+
+        Contract: only tokens the slot itself wrote (rejected draft tokens)
+        may be rolled back. Those positions went through
+        :meth:`ensure_writable`, whose CoW fork guarantees the backing pages
+        are exclusively owned — dropping a page another slot still holds
+        (refcount > 1) means the caller rolled back adopted prefix content
+        and raises :class:`PoolError` before any state is mutated.
+
+        Under ``admission="reserve"`` each freed page is returned to the
+        slot's reservation, preserving the cannot-fail growth guarantee for
+        a later re-draft over the same positions. The registry refresh then
+        unregisters any still-held registered page whose coverage extends
+        past the new live len into positions this slot wrote
+        (``_written``) — without it, a later ``admit`` could adopt a page
+        whose tail holds rejected draft KV.
+        """
+        n = min(int(n), int(self.lens[slot]))
+        if n <= 0:
+            return 0
+        new_len = int(self.lens[slot]) - n
+        keep = self.pages_for(new_len)
+        held = self._slot_pages[slot]
+        dropped = held[keep:]
+        for pid in dropped:
+            if self._ref[pid] > 1:
+                raise PoolError(
+                    f"rollback({slot}, {n}) would drop shared page {pid} "
+                    f"(ref {int(self._ref[pid])}): only self-written tokens "
+                    "may be rolled back"
+                )
+        for pid in dropped:
+            self._ref[pid] -= 1
+            self._unregister(pid)
+            self.alloc.free([pid])
+        del held[keep:]
+        self.block_tables[slot, keep:] = 0
+        self.lens[slot] = new_len
+        if dropped and self.admission == "reserve":
+            self._slot_reserved[slot] += len(dropped)
+            self.alloc.reserved += len(dropped)
+        for pg, pid in enumerate(held):
+            end = (pg + 1) * self.page
+            if (
+                pid in self._page_parent
+                and new_len < end <= int(self._written[slot])
+            ):
+                self._unregister(pid)
+        return len(dropped)
 
     def register_prompt(self, slot: int, prompt: np.ndarray) -> None:
         """Publish ``slot``'s full prompt pages in the prefix registry.
@@ -505,6 +566,7 @@ class PagedKVPool:
         self._slot_reserved[slot] = 0
         self.block_tables[slot] = 0
         self.lens[slot] = 0
+        self._written[slot] = 0
 
     # ---- invariants (property tests / debugging) -----------------------------
 
@@ -546,6 +608,18 @@ class PagedKVPool:
             ), (slot, len(self._slot_pages[slot]), self._offslot_pages(slot), n_logical)
             for pg, pid in enumerate(self._slot_pages[slot]):
                 assert self.block_tables[slot, pg] == pid
+                # Rollback hygiene: no registry entry may extend past the
+                # slot's live len into positions the slot itself wrote —
+                # such a page would advertise rejected-draft KV for adoption.
+                end = (pg + 1) * self.page
+                assert not (
+                    pid in self._page_parent
+                    and int(self.lens[slot]) < end <= int(self._written[slot])
+                ), (
+                    f"registered page {pid} of slot {slot} extends past live "
+                    f"len {int(self.lens[slot])} into written tail "
+                    f"(page end {end}, written {int(self._written[slot])})"
+                )
             for pg in range(len(self._slot_pages[slot]), self.blocks_per_seq):
                 assert self.block_tables[slot, pg] == 0
         for parent, (pid, _) in self._chain_next.items():

@@ -46,6 +46,12 @@ class Slot:
                                       # (shared-prefix adoption + chunks)
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    n_prior: int = 0                  # leading entries of ``generated`` that
+                                      # were re-prefilled as part of the
+                                      # prompt on a preemption restore (the
+                                      # committed stream is prompt +
+                                      # generated[n_prior:] — prompt already
+                                      # carries the prior tokens)
 
     @property
     def prefilling(self) -> bool:
@@ -69,6 +75,9 @@ class StepItem:
     is_prefill: bool
     finishes_prompt: bool = False     # this chunk covers the prompt's last
                                       # token -> the row samples this step
+    n_draft: int = 0                  # speculative draft tokens verified in
+                                      # this row (decode rows only):
+                                      # q_len == 1 + n_draft
 
 
 class ContinuousScheduler:
@@ -166,7 +175,7 @@ class ContinuousScheduler:
 
     # ---- step planning -------------------------------------------------------
 
-    def plan_step(self) -> list[StepItem]:
+    def plan_step(self, draft_lens: Optional[dict] = None) -> list[StepItem]:
         """Plan one ragged mixed step under the token budget.
 
         Decode rows come first (one token each — they are latency-critical
@@ -176,6 +185,13 @@ class ContinuousScheduler:
         retire in bounded time (``new_limit``) and hand their budget back,
         so prefill progress is delayed, never deadlocked. If *only* prefill
         slots are active the full budget is theirs.
+
+        ``draft_lens`` (slot -> K speculative draft tokens) upgrades decode
+        rows to ``q_len = 1 + K`` verification chunks. Drafts are best
+        effort: each row's K is clamped to ``prefill_chunk - 1`` (the row
+        must fit the step's wide width) and to the budget left after every
+        decode row's guaranteed 1 token, so speculation can never starve a
+        decode row out of a plan it would otherwise be in.
         """
         decode_rows: list[int] = []
         prefill_rows: list[int] = []
@@ -183,8 +199,19 @@ class ContinuousScheduler:
             if st is None or st.done or i in self.suspended:
                 continue
             (prefill_rows if st.prefilling else decode_rows).append(i)
-        items = [StepItem(i, 1, False) for i in decode_rows]
-        left = self.token_budget - len(items)
+        items = []
+        spare = self.token_budget - len(decode_rows)
+        for i in decode_rows:
+            k = 0
+            if draft_lens:
+                k = min(
+                    max(int(draft_lens.get(i, 0)), 0),
+                    self.prefill_chunk - 1,
+                    max(spare, 0),
+                )
+                spare -= k
+            items.append(StepItem(i, 1 + k, False, n_draft=k))
+        left = self.token_budget - sum(it.q_len for it in items)
         if not prefill_rows or left <= 0:
             return items
         # Rotate so successive steps serve prefilling slots fairly.

@@ -160,7 +160,7 @@ class _FakeSampler:
         self.history = [{"current_order": "cyclic", "fwd_miss": fwd_miss}]
         self.calls = 0
 
-    def sample(self, pool):
+    def sample(self, pool, step_q=None):
         self.calls += 1
         self.history.append(
             {"current_order": self.current_order, "fwd_miss": self.fwd_miss}
@@ -300,7 +300,7 @@ def _stream(cfg, lm, params, order, *, force_switch_to=None, switch_at=4):
         ctl = eng.order_ctl
         ctl.enabled = True
 
-        def forced(step_epoch, pool, sampler):
+        def forced(step_epoch, pool, sampler, step_q=None):
             if step_epoch == switch_at and ctl.switches == 0:
                 ctl.switch_to(force_switch_to)
                 return True
